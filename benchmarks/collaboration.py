@@ -1,0 +1,80 @@
+"""Paper Table 4 analogue: K-user collaboration — 'Joint' vs 'Alone' vs
+'Collaboration' on per-user data slices (each user's data comes from a
+different synthetic bigram table = different 'task')."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import bench_cfg, fmt_row
+from repro.configs.base import ColaConfig
+from repro.core.collab import CollabSession
+from repro.core.session import ColaSession
+from repro.data.pipeline import SyntheticLM
+from repro.models import model as M
+from repro.optim import optimizers as opt
+
+
+def run(report):
+    cfg = bench_cfg()
+    K, steps, B, S = 2, 40, 8, 32
+    key = jax.random.PRNGKey(0)
+    params = M.init(cfg, key)
+    # per-user datasets (different transition tables)
+    users_data = [SyntheticLM(cfg, batch=B, seq=S, seed=100 + k)
+                  for k in range(K)]
+
+    def mixed_batch(t):
+        bs = [users_data[k].batch_at(t) for k in range(K)]
+        batch = {key_: np.concatenate([b[key_] for b in bs])[:B]
+                 for key_ in bs[0]}
+        uid = np.concatenate([np.full(B // K, k) for k in range(K)])
+        return ({k_: jnp.asarray(v) for k_, v in batch.items()},
+                jnp.asarray(uid))
+
+    def eval_user(p, k):
+        b = users_data[k].batch_at(999)
+        loss, _ = M.loss_fn(cfg, p, {kk: jnp.asarray(v) for kk, v in b.items()})
+        return float(loss)
+
+    report("# Table 4 analogue: joint vs alone vs collaboration (K=2)")
+    report(fmt_row("setup", "user0_loss", "user1_loss", "avg"))
+
+    # Joint: one adapter bank on mixed data
+    cc = ColaConfig(mode="faithful_offload", family="lowrank", rank=8,
+                    taps="qv", merged=True)
+    joint = ColaSession(cfg, cc, params, key, optimizer=opt.sgd(0.05))
+    for t in range(steps):
+        b, _ = mixed_batch(t)
+        joint.step(b)
+    jp = joint._effective_params()
+    l0, l1 = eval_user(jp, 0), eval_user(jp, 1)
+    report(fmt_row("joint", f"{l0:.4f}", f"{l1:.4f}", f"{(l0+l1)/2:.4f}"))
+
+    # Alone: separate sessions per user
+    alone_losses = []
+    for k in range(K):
+        sess = ColaSession(cfg, cc, params, jax.random.fold_in(key, k),
+                           optimizer=opt.sgd(0.05))
+        for t in range(steps):
+            b = users_data[k].batch_at(t)
+            sess.step({kk: jnp.asarray(v) for kk, v in b.items()})
+        alone_losses.append(eval_user(sess._effective_params(), k))
+    report(fmt_row("alone", f"{alone_losses[0]:.4f}", f"{alone_losses[1]:.4f}",
+                   f"{np.mean(alone_losses):.4f}"))
+
+    # Collaboration: merged banks, per-user gradient isolation
+    cc_k = ColaConfig(mode="faithful_offload", family="lowrank", rank=8,
+                      taps="qv", merged=True, users=K)
+    collab = CollabSession(cfg, cc_k, params, key, optimizer=opt.sgd(0.05))
+    for t in range(steps):
+        b, uid = mixed_batch(t)
+        collab.train_step(b, uid)
+    cp = collab.merged_model()
+    l0, l1 = eval_user(cp, 0), eval_user(cp, 1)
+    report(fmt_row("collaboration", f"{l0:.4f}", f"{l1:.4f}",
+                   f"{(l0+l1)/2:.4f}"))
+    report("# expectation (paper): collaboration ~ joint ~ alone-per-user; "
+           "merging 'alone' banks post-hoc degrades (not shown: alone banks "
+           "were never trained merged)")

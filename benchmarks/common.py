@@ -1,0 +1,51 @@
+"""Shared benchmark utilities."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import registry
+from repro.configs.base import ColaConfig
+from repro.core.session import ColaSession
+from repro.data.pipeline import SyntheticLM
+from repro.models import model as M
+from repro.optim import optimizers as opt
+
+
+def bench_cfg(arch="gpt2-small", **kw):
+    """The paper's own base-model family (gpt2), reduced for CPU benching."""
+    cfg = registry.reduced_config(arch)
+    over = dict(n_layers=2, d_model=64, n_heads=4, n_kv_heads=4, d_head=16,
+                d_ff=128, vocab_size=256)
+    over.update(kw)
+    try:
+        return cfg.replace(**over)
+    except Exception:
+        return cfg
+
+
+def timed(fn, *args, iters=10, warmup=2):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters
+
+
+def train_curve(arch_cfg, cc: ColaConfig, steps=40, batch=8, seq=32, lr=0.05,
+                seed=0):
+    key = jax.random.PRNGKey(seed)
+    params = M.init(arch_cfg, key)
+    data = SyntheticLM(arch_cfg, batch=batch, seq=seq, seed=seed)
+    sess = ColaSession(arch_cfg, cc, params, key, optimizer=opt.sgd(lr))
+    losses = [sess.step(data.batch_at(t)) for t in range(steps)]
+    return sess, losses
+
+
+def fmt_row(*cols):
+    return ",".join(str(c) for c in cols)

@@ -1,0 +1,58 @@
+"""Paper Tables 2/3/6 analogue: ColA(LowRank) matches LoRA; ColA(Linear)/
+ColA(MLP) can outperform; all modes trained on the same synthetic LM task.
+
+(The GLUE/S2S datasets are not available offline; the *claims* under test are
+about optimization equivalence and adapter-family capacity, which the
+synthetic bigram task exposes.)"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import bench_cfg, fmt_row, train_curve
+from repro.configs.base import ColaConfig
+
+
+def run(report):
+    cfg = bench_cfg()
+    steps = 60
+    report("# Tables 2/3 analogue: final train loss per method (synthetic LM)")
+    report(fmt_row("method", "trainable", "loss_start", "loss_final"))
+
+    runs = {
+        "ft": ColaConfig(mode="ft"),
+        "lora_r8": ColaConfig(mode="lora", family="lowrank", rank=8, taps="qv"),
+        "cola_lowrank_unmerged": ColaConfig(mode="faithful_offload",
+                                            family="lowrank", rank=8, taps="qv"),
+        "cola_lowrank_merged": ColaConfig(mode="faithful_offload",
+                                          family="lowrank", rank=8, taps="qv",
+                                          merged=True),
+        "cola_linear_merged": ColaConfig(mode="faithful_offload",
+                                         family="linear", taps="qv",
+                                         merged=True),
+        "cola_mlp_unmerged": ColaConfig(mode="faithful_offload", family="mlp",
+                                        hidden=32, taps="qv"),
+        "cola_fused_fit_b": ColaConfig(mode="fused_fit", family="lowrank",
+                                       rank=8, taps="qv"),
+    }
+    results = {}
+    for name, cc in runs.items():
+        sess, losses = train_curve(cfg, cc, steps=steps)
+        if cc.mode == "ft":
+            trainable = "100%"
+        else:
+            import jax
+            from repro.utils import tree_count
+            n = tree_count(sess.adapters)
+            trainable = str(n)
+        results[name] = losses
+        report(fmt_row(name, trainable, f"{losses[0]:.4f}",
+                       f"{np.mean(losses[-5:]):.4f}"))
+
+    # the reproduction gates (asserted, not just reported):
+    lora = np.mean(results["lora_r8"][-5:])
+    cola = np.mean(results["cola_lowrank_unmerged"][-5:])
+    colb = np.mean(results["cola_fused_fit_b"][-5:])
+    assert abs(lora - cola) / lora < 0.02, "ColA(LowRank) must match LoRA"
+    assert abs(lora - colb) / lora < 0.02, "Mode B must match LoRA"
+    report("# gate passed: |ColA(LowRank) - LoRA| < 2% (paper: 'the gradient "
+           "computed with our methods exactly matches the gradient of LoRA')")

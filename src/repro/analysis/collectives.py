@@ -1,0 +1,47 @@
+"""Collective-op breakdown of a compiled module — the 'profile' of the
+dry-run perf loop: which collectives, what shapes, how many bytes."""
+from __future__ import annotations
+
+import collections
+import re
+
+from repro.analysis.roofline import _COLL_RE, _DTYPE_BYTES, _SHAPE_RE
+
+
+def breakdown(hlo_text: str, top: int = 15) -> list[tuple[str, int, float]]:
+    """Returns [(op@shape, count, total_bytes)] sorted by bytes desc."""
+    agg: dict[tuple[str, str], list] = collections.defaultdict(lambda: [0, 0.0])
+    for line in hlo_text.splitlines():
+        if "-done(" in line:
+            continue
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        op = m.group("op")
+        shapes = _SHAPE_RE.findall(m.group("shapes"))
+        nbytes = 0
+        sig = []
+        for dtype, dims in shapes:
+            b = _DTYPE_BYTES.get(dtype, 0)
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            nbytes += n * b
+            sig.append(f"{dtype}[{dims}]")
+        factor = 2.0 if op == "all-reduce" else 1.0
+        key = (op, ",".join(sig))
+        agg[key][0] += 1
+        agg[key][1] += factor * nbytes
+    rows = [(f"{op} {sig}", c, b) for (op, sig), (c, b) in agg.items()]
+    rows.sort(key=lambda r: -r[2])
+    return rows[:top]
+
+
+def print_breakdown(hlo_text: str, top: int = 15, report=print) -> None:
+    total = 0.0
+    rows = breakdown(hlo_text, top)
+    for name, count, nbytes in rows:
+        report(f"  {nbytes/2**30:8.3f} GB  x{count:<4d} {name}")
+        total += nbytes
+    report(f"  (top-{top} total {total/2**30:.2f} GB per device program)")

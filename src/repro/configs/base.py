@@ -1,0 +1,118 @@
+"""Config system: ModelConfig (architecture), TrainConfig (ColA/optimizer),
+MeshConfig. Configs are frozen dataclasses -> hashable -> usable as jit static
+arguments.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                    # dense | moe | ssm | hybrid
+    n_layers: int
+    d_model: int
+    n_heads: int = 0
+    n_kv_heads: int = 0
+    d_head: int = 0
+    d_ff: int = 0
+    vocab_size: int = 32000
+    # attention
+    rope_theta: float = 1e4
+    qk_norm: bool = False
+    attn_pattern: str = "global"   # "global" | "local_global" (alternating pairs)
+    local_window: int = 4096
+    attn_softcap: float = 0.0      # gemma2: 50.0
+    final_softcap: float = 0.0     # gemma2: 30.0
+    act: str = "silu"              # "silu" | "gelu"
+    post_norm: bool = False        # gemma2 post-layernorms
+    norm_plus_one: bool = False    # gemma-style (1+scale) rmsnorm
+    embed_scale: bool = False      # gemma-style sqrt(d_model) embedding scaling
+    # moe
+    n_experts: int = 0
+    moe_top_k: int = 0
+    d_expert: int = 0
+    moe_impl: str = "einsum"       # "einsum" (GShard baseline) | "sort" (optimized)
+    capacity_factor: float = 1.25
+    moe_group: int = 512           # GShard dispatch group size (tokens)
+    aux_loss_coef: float = 0.01
+    # ssm (mamba2 / zamba2)
+    ssm_state: int = 0
+    ssm_headdim: int = 64
+    ssm_expand: int = 2
+    ssm_conv: int = 4
+    ssd_chunk: int = 128
+    shared_attn_every: int = 0     # zamba2: one shared attn block every N layers
+    # modality stubs
+    n_codebooks: int = 0           # musicgen: EnCodec codebooks
+    embed_input: bool = False      # pixtral: inputs are precomputed patch embeds
+    # misc
+    tie_embeddings: bool = True
+    norm_eps: float = 1e-5
+    param_dtype: str = "bfloat16"
+    compute_dtype: str = "bfloat16"
+    remat: str = "full"            # "none" | "full" | "dots"
+    loss_chunk: int = 0            # >0: chunked cross-entropy over seq (memory opt)
+    microbatches: int = 1          # grad-accumulation splits inside train_step
+    shard_policy: str = "2d"       # "2d" (DP+FSDP+TP) | "dp" (pure data parallel
+                                   # over every mesh axis; for small models whose
+                                   # heads/dims do not divide the model axis)
+
+    @property
+    def is_attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """Eligible for the long_500k cell (SSM / hybrid only; gemma2's global
+        layers make it quadratic, so alternating local/global does NOT count)."""
+        return self.family in ("ssm", "hybrid")
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclass(frozen=True)
+class ColaConfig:
+    """How ColA is attached to a model (static)."""
+    mode: str = "fused_fit"        # "faithful_offload" (Mode A) | "fused_fit" (Mode B)
+                                   # | "lora" (classic PEFT baseline) | "ft" | "frozen"
+    family: str = "lowrank"        # adapter family for all taps ("lowrank"|"linear"|"mlp")
+    taps: str = "qv"               # "qv" | "all_attn" | "mlp" | "all" | "ssm"
+    rank: int = 8
+    hidden: int = 128
+    scale: float = 1.0
+    merged: bool = False           # parameter merging during training (Alg.1 l.3/8)
+    interval: int = 1              # adaptation interval I
+    users: int = 1                 # K collaborative users
+    compress: str = "none"         # "none" | "int8" (offload compression)
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    batch: int = 32
+    seq: int = 128
+    lr: float = 3e-4
+    weight_decay: float = 5e-4
+    warmup: float = 0.05
+    steps: int = 100
+    optimizer: str = "adamw"
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    grad_clip: float = 1.0
+    schedule: str = "linear"       # "linear" | "cosine" | "const"
+    seed: int = 0
+
+
+@dataclass(frozen=True)
+class MeshConfig:
+    data: int = 16
+    model: int = 16
+    pods: int = 1
+
+    @property
+    def devices(self) -> int:
+        return self.data * self.model * self.pods

@@ -1,0 +1,157 @@
+"""Architecture registry: configs, reduced smoke variants, shape cells and
+ShapeDtypeStruct input specs for the dry-run.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.utils import canonical_dtype
+
+ARCH_MODULES = {
+    "musicgen-medium": "repro.configs.musicgen_medium",
+    "mistral-nemo-12b": "repro.configs.mistral_nemo_12b",
+    "mistral-large-123b": "repro.configs.mistral_large_123b",
+    "gemma2-9b": "repro.configs.gemma2_9b",
+    "smollm-135m": "repro.configs.smollm_135m",
+    "mamba2-370m": "repro.configs.mamba2_370m",
+    "zamba2-7b": "repro.configs.zamba2_7b",
+    "qwen3-moe-30b-a3b": "repro.configs.qwen3_moe_30b_a3b",
+    "dbrx-132b": "repro.configs.dbrx_132b",
+    "pixtral-12b": "repro.configs.pixtral_12b",
+    "gpt2-small": "repro.configs.gpt2_small",
+}
+
+ASSIGNED = tuple(k for k in ARCH_MODULES if k != "gpt2-small")
+
+
+def get_config(name: str) -> ModelConfig:
+    mod = importlib.import_module(ARCH_MODULES[name])
+    return mod.get_config()
+
+
+def reduced_config(name: str) -> ModelConfig:
+    """Tiny same-family variant for CPU smoke tests (one fwd/train step)."""
+    cfg = get_config(name)
+    kw: dict = dict(
+        n_layers=min(cfg.n_layers, 4),
+        d_model=128,
+        vocab_size=min(cfg.vocab_size, 512),
+        param_dtype="float32", compute_dtype="float32", remat="none",
+        loss_chunk=0,
+    )
+    if cfg.n_heads:
+        kw.update(n_heads=4, d_head=32,
+                  n_kv_heads=2 if cfg.n_kv_heads < cfg.n_heads else 4)
+    if cfg.d_ff:
+        kw.update(d_ff=256)
+    if cfg.n_experts:
+        kw.update(n_experts=8, moe_top_k=2, d_expert=64)
+    if cfg.ssm_state:
+        kw.update(ssm_state=16, ssm_headdim=16, ssd_chunk=32)
+    if cfg.shared_attn_every:
+        kw.update(n_layers=7, shared_attn_every=3)
+    if cfg.attn_pattern == "local_global":
+        kw.update(local_window=16)
+    return cfg.replace(**kw)
+
+
+# ---------------------------------------------------------------------------
+# shape cells
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str          # "train" | "prefill" | "decode"
+    seq: int
+    batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524288, 1),
+}
+
+
+def applicable_shapes(cfg: ModelConfig) -> list[str]:
+    """Skip rules: long_500k only for sub-quadratic (SSM / hybrid) archs."""
+    shapes = ["train_4k", "prefill_32k", "decode_32k"]
+    if cfg.sub_quadratic:
+        shapes.append("long_500k")
+    return shapes
+
+
+def all_cells() -> list[tuple[str, str]]:
+    cells = []
+    for arch in ASSIGNED:
+        cfg = get_config(arch)
+        for s in applicable_shapes(cfg):
+            cells.append((arch, s))
+    return cells
+
+
+def skipped_cells() -> list[tuple[str, str, str]]:
+    out = []
+    for arch in ASSIGNED:
+        cfg = get_config(arch)
+        if not cfg.sub_quadratic:
+            out.append((arch, "long_500k",
+                        "full quadratic attention; 500k ctx requires sub-quadratic"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins — no allocation)
+# ---------------------------------------------------------------------------
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, canonical_dtype(dtype) if isinstance(dtype, str) else dtype)
+
+
+def batch_specs(cfg: ModelConfig, batch: int, seq: int) -> dict:
+    """Training/prefill batch input specs for one model."""
+    if cfg.embed_input:
+        return {
+            "embeds": _sds((batch, seq, cfg.d_model), cfg.compute_dtype),
+            "labels": _sds((batch, seq), jnp.int32),
+        }
+    if cfg.n_codebooks:
+        return {
+            "tokens": _sds((batch, seq, cfg.n_codebooks), jnp.int32),
+            "labels": _sds((batch, seq, cfg.n_codebooks), jnp.int32),
+        }
+    return {
+        "tokens": _sds((batch, seq), jnp.int32),
+        "labels": _sds((batch, seq), jnp.int32),
+    }
+
+
+def decode_token_specs(cfg: ModelConfig, batch: int) -> dict:
+    if cfg.embed_input:
+        tok = {"embeds": _sds((batch, 1, cfg.d_model), cfg.compute_dtype)}
+    elif cfg.n_codebooks:
+        tok = {"tokens": _sds((batch, 1, cfg.n_codebooks), jnp.int32)}
+    else:
+        tok = {"tokens": _sds((batch, 1), jnp.int32)}
+    tok["positions"] = _sds((batch,), jnp.int32)
+    return tok
+
+
+def input_specs(cfg: ModelConfig, shape_name: str) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of a dry-run cell.
+
+    For decode cells the KV/SSM cache specs are produced by the model module
+    (``repro.models.model.cache_specs``) and merged in by the dry-run driver.
+    """
+    spec = SHAPES[shape_name]
+    if spec.kind in ("train", "prefill"):
+        return batch_specs(cfg, spec.batch, spec.seq)
+    return decode_token_specs(cfg, spec.batch)

@@ -1,0 +1,100 @@
+"""Auxiliary models g_w (the paper's model-agnostic adapters).
+
+Families
+--------
+- ``lowrank``  : g(x) = (x @ A) @ B           (== LoRA; mergeable, Prop 2)
+- ``linear``   : g(x) = x @ W                 (== full delta-W; mergeable, Prop 2;
+                 recovers full fine-tuning / training-from-scratch, paper §C.3)
+- ``mlp``      : g(x) = relu(x @ W1 + b1) @ W2 (NOT mergeable — nonlinear in x)
+
+Adapters are plain pytrees; a family is identified by the static string carried in
+``ColaSpec`` (see ``repro.core.taps``). Everything here is shape-polymorphic so the
+same code runs per-layer or stacked over a leading layer axis via vmap/scan.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+MERGEABLE = {"lowrank": True, "linear": True, "mlp": False,
+             "multi_lowrank": False}
+FAMILIES = tuple(MERGEABLE)
+
+
+def init(family: str, key: jax.Array, d_in: int, d_out: int, *,
+         rank: int = 8, hidden: int = 128, dtype=jnp.float32) -> Params:
+    """Initialise adapter params so that g(x) == 0 at t=0 (paper Alg. 1 init)."""
+    if family == "lowrank":
+        # LoRA init: A ~ N(0, 1/r) (kaiming-ish), B = 0  -> g(x)=0.
+        a = jax.random.normal(key, (d_in, rank), dtype) / jnp.sqrt(jnp.asarray(rank, dtype))
+        return {"A": a, "B": jnp.zeros((rank, d_out), dtype)}
+    if family == "linear":
+        return {"W": jnp.zeros((d_in, d_out), dtype)}
+    if family == "mlp":
+        w1 = jax.random.normal(key, (d_in, hidden), dtype) / jnp.sqrt(jnp.asarray(d_in, dtype))
+        return {
+            "W1": w1,
+            "b1": jnp.zeros((hidden,), dtype),
+            "W2": jnp.zeros((hidden, d_out), dtype),
+        }
+    raise ValueError(f"unknown adapter family: {family!r}")
+
+
+def apply(family: str, w: Params, x: jax.Array) -> jax.Array:
+    """g_w(x). x: (..., d_in) -> (..., d_out). Computes in x.dtype."""
+    if family == "lowrank":
+        return (x @ w["A"].astype(x.dtype)) @ w["B"].astype(x.dtype)
+    if family == "linear":
+        return x @ w["W"].astype(x.dtype)
+    if family == "mlp":
+        h = jax.nn.relu(x @ w["W1"].astype(x.dtype) + w["b1"].astype(x.dtype))
+        return h @ w["W2"].astype(x.dtype)
+    if family == "multi_lowrank":
+        # FTaaS serving: per-request adapters in one batch (multi-LoRA).
+        # w: {"A": (U, d_in, r), "B": (U, r, d_out), "idx": (B,)}; x: (B, S, d).
+        from repro.kernels import ops as kernel_ops
+        Bz, S = x.shape[0], x.shape[1]
+        flat = x.reshape(Bz * S, x.shape[-1])
+        idx = jnp.repeat(w["idx"].astype(jnp.int32), S)
+        y = kernel_ops.multi_lora(flat, w["A"], w["B"], idx)
+        return y.reshape(Bz, S, -1)
+    raise ValueError(f"unknown adapter family: {family!r}")
+
+
+def merge_delta(family: str, w: Params, scale: float) -> jax.Array:
+    """Return the delta-W such that base_W + delta == merged weights (Prop 2).
+
+    Only defined for families linear in x. Supports stacked leading layer axes.
+    """
+    if family == "lowrank":
+        return scale * (w["A"] @ w["B"])
+    if family == "linear":
+        return scale * w["W"]
+    raise ValueError(f"adapter family {family!r} is not mergeable (Prop 2: "
+                     "merging requires g linear in its input)")
+
+
+def is_mergeable(family: str) -> bool:
+    return MERGEABLE[family]
+
+
+def shapes(family: str, d_in: int, d_out: int, *, rank: int = 8,
+           hidden: int = 128) -> dict[str, tuple[int, ...]]:
+    if family == "lowrank":
+        return {"A": (d_in, rank), "B": (rank, d_out)}
+    if family == "linear":
+        return {"W": (d_in, d_out)}
+    if family == "mlp":
+        return {"W1": (d_in, hidden), "b1": (hidden,), "W2": (hidden, d_out)}
+    raise ValueError(family)
+
+
+def param_count(family: str, d_in: int, d_out: int, *, rank: int = 8,
+                hidden: int = 128) -> int:
+    import numpy as np
+    return sum(int(np.prod(s)) for s in shapes(
+        family, d_in, d_out, rank=rank, hidden=hidden).values())

@@ -1,0 +1,104 @@
+"""K-user collaboration (paper §3.2 FTaaS, Table 4).
+
+Setups (paper Table 4):
+- "joint":  one shared adapter bank trained on all users' data.
+- "alone":  each user trains their own bank on their own rows (no merging
+            during training); merging the K banks only at inference degrades —
+            the paper's observation, reproduced in benchmarks/collaboration.py.
+- "collab": all K banks merged into the base weights during training; each
+            user's rows update only their own bank (per-user gradient
+            isolation via row masking — exact, since the fit VJP is linear in
+            grad_h).
+
+The server cost is constant in K: one merged forward/backward per batch
+(paper Table 1, ColA merged row).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ColaConfig, ModelConfig
+from repro.core import gl, merge
+from repro.core import taps as taps_lib
+from repro.core.offload import Offloader
+from repro.models import model as model_lib
+from repro.optim import optimizers as optim_lib
+
+Array = jax.Array
+
+
+def mask_user_rows(data: dict[str, tuple], user_ids: Array, k: int) -> dict:
+    """Zero grad_h on rows not belonging to user k. Because the fit gradient is
+    linear in grad_h, fitting on masked data gives exactly user k's gradient."""
+    out = {}
+    for tap, (x, gh) in data.items():
+        b_axis = gh.ndim - 3          # (L?, B, S, d)
+        shape = [1] * gh.ndim
+        shape[b_axis] = gh.shape[b_axis]
+        m = (user_ids == k).astype(gh.dtype).reshape(shape)
+        out[tap] = (x, gh * m)
+    return out
+
+
+class CollabSession:
+    """K users fine-tuning one base model collaboratively (merged training)."""
+
+    def __init__(self, cfg: ModelConfig, cc: ColaConfig, params: dict,
+                 key: Array, optimizer=None, lr=1e-3,
+                 families: list[str] | None = None):
+        assert cc.mode == "faithful_offload" and cc.merged, \
+            "collaboration uses merged faithful-offload training (Alg. 1)"
+        self.cfg, self.cc = cfg, cc
+        self.base_params = params
+        self.K = cc.users
+        taps = gl.select_taps(cfg, cc.taps)
+        # users may choose different adapter families (paper: LowRank-Linear)
+        fams = families or [cc.family] * self.K
+        assert len(fams) == self.K
+        self.user_specs = [
+            taps_lib.make_spec(family=f, taps=taps, rank=cc.rank,
+                               hidden=cc.hidden, scale=cc.scale)
+            for f in fams]
+        self.server_spec = gl.make_spec(cfg, cc)   # inject/collect only
+        optimizer = optimizer or optim_lib.adamw(lr)
+        sites = model_lib.tap_sites(cfg)
+        self.offloaders = []
+        for k in range(self.K):
+            ad = taps_lib.init_adapter_vars(
+                self.user_specs[k], sites, jax.random.fold_in(key, k))
+            self.offloaders.append(Offloader(
+                self.user_specs[k], ad, optimizer, interval=cc.interval,
+                compress=cc.compress))
+        self._server = jax.jit(functools.partial(
+            gl.server_step_a, cfg, self.server_spec))
+        self._merged_cache = None
+        self.step_count = 0
+
+    # ------------------------------------------------------------------
+    def merged_model(self) -> dict:
+        if self._merged_cache is None:
+            p = self.base_params
+            for k in range(self.K):
+                p = merge.merged_params(self.cfg, p,
+                                        self.user_specs[k].family_map,
+                                        self.offloaders[k].adapters,
+                                        self.cc.scale)
+            self._merged_cache = p
+        return self._merged_cache
+
+    def train_step(self, batch: dict, user_ids: Array) -> float:
+        """One FTaaS iteration: merged server pass + per-user offloaded fits."""
+        self.step_count += 1
+        params = self.merged_model()
+        loss, data, _ = self._server(params, {}, batch)
+        updated = False
+        for k in range(self.K):
+            self.offloaders[k].push(mask_user_rows(data, user_ids, k))
+            if self.offloaders[k].maybe_fit() is not None:
+                updated = True
+        if updated:
+            self._merged_cache = None
+        return float(loss)

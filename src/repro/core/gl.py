@@ -1,0 +1,214 @@
+"""Gradient Learning (GL): the paper's core algorithm, as composable JAX.
+
+Two equivalent executions of the same math (Prop 1), tested to agree bit-for-bit:
+
+- **Mode A — faithful_offload** (paper Alg. 1): the server step runs forward +
+  backward *w.r.t. injected deltas only*, exporting adaptation data
+  ``{tap: (x_m, grad_h_m)}``. ``fit_grads`` then evaluates the gradient of the
+  quadratic fit loss (Eq. 6) anywhere — no access to the base model needed.
+
+- **Mode B — fused_fit** (beyond-paper): the fit-gradient contraction happens
+  inside the same XLA program via ``jax.grad`` w.r.t. the adapter vars, which by
+  Prop 1 yields the identical numbers while never exporting (B,S,d) tensors.
+
+Also here: the classic baselines the paper compares against (LoRA == Mode B with
+on-device optimizer; full FT) and tap selection.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ColaConfig, ModelConfig
+from repro.core import adapters as adapters_lib
+from repro.core import taps as taps_lib
+from repro.core.taps import ColaSpec
+from repro.kernels import ops as kernel_ops
+from repro.models import model as model_lib
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# tap selection
+# ---------------------------------------------------------------------------
+
+def select_taps(cfg: ModelConfig, taps: str) -> tuple[str, ...]:
+    sites = model_lib.tap_sites(cfg)
+    if taps == "qv":
+        names = [n for n in sites
+                 if n.endswith("attn.q") or n.endswith("attn.v")]
+        if not names:   # attention-free (mamba2): tap the SSM projections
+            names = [n for n in sites if ".ssm." in n]
+    elif taps == "all_attn":
+        names = [n for n in sites if ".attn." in n]
+    elif taps == "mlp":
+        names = [n for n in sites if ".mlp." in n]
+    elif taps == "ssm":
+        names = [n for n in sites if ".ssm." in n]
+    elif taps == "all":
+        names = list(sites)
+    else:
+        names = [n for n in sites if n in taps.split(",")]
+        if not names:
+            raise ValueError(f"no taps matched {taps!r}")
+    return tuple(sorted(names))
+
+
+def make_spec(cfg: ModelConfig, cc: ColaConfig) -> ColaSpec:
+    taps = select_taps(cfg, cc.taps)
+    if cc.mode in ("ft", "frozen"):
+        return taps_lib.make_spec()
+    collect = inject = ()
+    families = {t: cc.family for t in taps}
+    if cc.mode == "faithful_offload":
+        collect, inject = taps, taps
+        if cc.merged:
+            # merged server pass: adapters folded into the base weights, only
+            # injection+collection live in the graph (zero adapter FLOPs).
+            families = {}
+    return taps_lib.ColaSpec(families=tuple(sorted(families.items())),
+                             collect=collect, inject=inject, scale=cc.scale,
+                             rank=cc.rank, hidden=cc.hidden)
+
+
+def init_adapters(cfg: ModelConfig, cc: ColaConfig, key: Array,
+                  dtype=jnp.float32) -> dict:
+    taps = select_taps(cfg, cc.taps)
+    sites = model_lib.tap_sites(cfg)
+    spec = taps_lib.make_spec(family=cc.family, taps=taps, rank=cc.rank,
+                              hidden=cc.hidden, scale=cc.scale)
+    return taps_lib.init_adapter_vars(spec, sites, key, dtype=dtype)
+
+
+# ---------------------------------------------------------------------------
+# Mode A: server step (grad of hidden representations only) + offloaded fit
+# ---------------------------------------------------------------------------
+
+def zero_deltas(cfg: ModelConfig, spec: ColaSpec, batch: int, seq: int,
+                dtype=jnp.float32) -> dict:
+    sites = model_lib.tap_sites(cfg)
+    return {name: jnp.zeros(model_lib.delta_shape(cfg, sites[name], batch, seq),
+                            dtype)
+            for name in spec.inject}
+
+
+def server_step_a(cfg: ModelConfig, spec: ColaSpec, params: dict,
+                  adapters: dict, batch: dict):
+    """Paper Alg. 1 lines 4-9: one forward + backward on the base device,
+    producing loss and adaptation data {tap: (x_m, grad_h_m)}.
+
+    ``params`` should already be merged if running in merged mode (then
+    ``spec.families`` is empty and adapters are not applied in-graph).
+    """
+    tok = batch.get("tokens", batch.get("embeds"))
+    bsz, seq = tok.shape[0], tok.shape[1]
+    deltas0 = zero_deltas(cfg, spec, bsz, seq)
+
+    def f(deltas):
+        loss, aux = model_lib.loss_fn(cfg, params, batch, spec,
+                                      {"adapters": adapters, "deltas": deltas})
+        return loss, aux
+
+    (loss, aux), grads = jax.value_and_grad(f, has_aux=True)(deltas0)
+    collected = dict(aux["collected"])
+    collected.update(aux.get("collected_shared", {}))
+    data = {t: (collected[t], grads[t]) for t in spec.inject}
+    return loss, data, aux
+
+
+def fit_grads(spec: ColaSpec, adapters: dict, data: dict[str, tuple]) -> dict:
+    """Gradient of the quadratic fit loss (Eq. 6) evaluated at w_t.
+
+    By Prop 1:  dl/dw|_{w_t} = (dg/dw)^T grad_h  — a VJP of the adapter alone.
+    Works for any adapter family; for lowrank it routes through the fused
+    cola_fit kernel. ``data``: {tap: (x, grad_h)} with x (L?, B, S, d_in).
+    Returns {tap: grad_pytree} matching ``adapters``.
+    """
+    out = {}
+    fam_map = spec.family_map
+    for tap, (x, gh) in data.items():
+        fam = fam_map[tap]
+        w = adapters[tap]
+        stacked = jax.tree.leaves(w)[0].ndim > 2  # leading layer axis present?
+        ghs = (gh * spec.scale).astype(jnp.float32)
+        xs = x.astype(jnp.float32)
+
+        def one(w_l, x_l, g_l):
+            xr = x_l.reshape(-1, x_l.shape[-1])
+            gr = g_l.reshape(-1, g_l.shape[-1])
+            if fam == "lowrank":
+                dA, dB = kernel_ops.cola_fit_lowrank(xr, gr, w_l["A"], w_l["B"])
+                return {"A": dA, "B": dB}
+            _, vjp = jax.vjp(lambda ww: adapters_lib.apply(fam, ww, xr), w_l)
+            (g,) = vjp(gr)
+            return g
+
+        if stacked and xs.ndim == 4:
+            out[tap] = jax.vmap(one)(w, xs, ghs)
+        elif not stacked and xs.ndim == 4:
+            # shared site: one adapter, per-invocation data — grads sum.
+            g = jax.vmap(lambda x_l, g_l: one(w, x_l, g_l))(xs, ghs)
+            out[tap] = jax.tree.map(lambda a: jnp.sum(a, axis=0), g)
+        else:
+            out[tap] = one(w, xs, ghs)
+    return out
+
+
+def fit_loss(spec: ColaSpec, adapters: dict, data: dict[str, tuple],
+             adapters_t: dict) -> Array:
+    """The literal quadratic objective of Eq. 6 (used by tests / multi-step
+    local fitting): 1/2 || g_w(x) - (dh_t - grad_h) ||^2 summed over taps.
+    ``adapters_t`` holds the w_t snapshot that defines dh_t."""
+    total = jnp.zeros((), jnp.float32)
+    fam_map = spec.family_map
+    for tap, (x, gh) in data.items():
+        fam = fam_map[tap]
+        xr = x.astype(jnp.float32)
+        ghr = (gh * spec.scale).astype(jnp.float32)
+
+        def g_apply(w, xx):
+            return adapters_lib.apply(fam, w, xx)
+
+        stacked = jax.tree.leaves(adapters[tap])[0].ndim > 2
+        if stacked and xr.ndim == 4:
+            dh_t = jax.vmap(g_apply)(adapters_t[tap], xr)
+            pred = jax.vmap(g_apply)(adapters[tap], xr)
+        elif not stacked and xr.ndim == 4:
+            dh_t = jax.vmap(lambda xx: g_apply(adapters_t[tap], xx))(xr)
+            pred = jax.vmap(lambda xx: g_apply(adapters[tap], xx))(xr)
+        else:
+            dh_t = g_apply(adapters_t[tap], xr)
+            pred = g_apply(adapters[tap], xr)
+        target = dh_t - ghr
+        total = total + 0.5 * jnp.sum((pred - target) ** 2)
+    return total
+
+
+# ---------------------------------------------------------------------------
+# Mode B: fused fit (and the LoRA baseline, which shares its math)
+# ---------------------------------------------------------------------------
+
+def train_step_b(cfg: ModelConfig, spec: ColaSpec, params: dict,
+                 adapters: dict, batch: dict):
+    """Loss + adapter gradients in one program. Base params are *not*
+    differentiated (frozen). Returns (loss, grads, aux)."""
+
+    def f(ad):
+        return model_lib.loss_fn(cfg, params, batch, spec, {"adapters": ad})
+
+    (loss, aux), grads = jax.value_and_grad(f, has_aux=True)(adapters)
+    return loss, grads, aux
+
+
+def train_step_ft(cfg: ModelConfig, params: dict, batch: dict):
+    """Full fine-tuning baseline: gradients of every base parameter."""
+
+    def f(p):
+        return model_lib.loss_fn(cfg, p, batch)
+
+    (loss, aux), grads = jax.value_and_grad(f, has_aux=True)(params)
+    return loss, grads, aux

@@ -1,0 +1,77 @@
+"""Parameter merging (paper §3.2 "Parameter merging", Prop 2, Alg. 1 l.3/8).
+
+Merging folds every mergeable adapter's delta-W into the matching base weight;
+unmerging subtracts it. Deltas are computed in f32 so that merge->unmerge
+round-trips exactly in f32 parameters and to ~1 ulp in bf16.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import adapters as adapters_lib
+from repro.core.taps import ColaSpec
+
+# tap-name suffix -> path inside a block's param dict (final key is "w")
+_SITE_PATHS = {
+    "attn.q": ("attn", "q"),
+    "attn.k": ("attn", "k"),
+    "attn.v": ("attn", "v"),
+    "attn.o": ("attn", "o"),
+    "mlp.gate": ("mlp", "gate"),
+    "mlp.up": ("mlp", "up"),
+    "mlp.down": ("mlp", "down"),
+    "ssm.in": ("ssm", "in_proj"),
+    "ssm.out": ("ssm", "out_proj"),
+}
+
+
+def _tap_path(tap: str) -> tuple[str, ...]:
+    prefix, suffix = tap.split(".", 1)
+    return (prefix,) + _SITE_PATHS[suffix] + ("w",)
+
+
+def _update_at(params: dict, path: tuple[str, ...], fn) -> dict:
+    """Functional deep-update of a nested dict."""
+    if len(path) == 1:
+        new = dict(params)
+        new[path[0]] = fn(params[path[0]])
+        return new
+    new = dict(params)
+    new[path[0]] = _update_at(params[path[0]], path[1:], fn)
+    return new
+
+
+def merge_adapters(cfg: ModelConfig, params: dict, families: dict[str, str],
+                   adapters: dict, scale: float, sign: float = 1.0) -> dict:
+    """Return params with sign * scale * delta_W(adapter) added at every tap."""
+    for tap, w in adapters.items():
+        fam = families[tap]
+        if not adapters_lib.is_mergeable(fam):
+            raise ValueError(
+                f"adapter family {fam!r} at {tap} is not mergeable (Prop 2)")
+        delta = adapters_lib.merge_delta(fam, jax.tree.map(
+            lambda a: a.astype(jnp.float32), w), scale)
+
+        def add(base, delta=delta):
+            return (base.astype(jnp.float32) + sign * delta).astype(base.dtype)
+
+        params = _update_at(params, _tap_path(tap), add)
+    return params
+
+
+def unmerge_adapters(cfg: ModelConfig, params: dict, families: dict[str, str],
+                     adapters: dict, scale: float) -> dict:
+    return merge_adapters(cfg, params, families, adapters, scale, sign=-1.0)
+
+
+def merged_params(cfg: ModelConfig, params: dict, spec_or_families,
+                  adapters: dict, scale: float | None = None) -> dict:
+    if isinstance(spec_or_families, ColaSpec):
+        families = spec_or_families.family_map
+        scale = spec_or_families.scale if scale is None else scale
+    else:
+        families = spec_or_families
+        assert scale is not None
+    return merge_adapters(cfg, params, families, adapters, scale)

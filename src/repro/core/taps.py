@@ -1,0 +1,137 @@
+"""Tap machinery: the functional replacement for the paper's PyTorch hooks.
+
+A *tap* is a named Dense site ``y = x @ W`` where ColA may
+  (1) apply an adapter:      y += scale * g_w(x)          (unmerged mode)
+  (2) inject a delta:        y += delta                   (grad-extraction: d/d delta == grad of h-hat)
+  (3) record the hidden input x (the paper's "gather hidden input of auxiliary
+      models from forward pass", Alg. 1 line 5).
+
+``ColaSpec`` is static (hashable) — carried through jit as a static arg.
+``cola_vars`` is the matching pytree: {"adapters": {tap: w}, "deltas": {tap: arr}}.
+
+Tap naming convention: taps inside the scanned layer stack are named
+``layers.<site>`` and their vars carry a leading (L,) axis which the model's scan
+slices per layer. Taps outside the stack (shared blocks, heads) use other prefixes
+and are unstacked.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Mapping
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import adapters as adapters_lib
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class TapSite:
+    """Static description of one tappable Dense site."""
+    name: str          # e.g. "layers.attn.q"
+    d_in: int
+    d_out: int
+    stacked: int = 0   # number of stacked layers (0 = unstacked)
+
+
+@dataclasses.dataclass(frozen=True)
+class ColaSpec:
+    """Static ColA call configuration (hashable; pass as static argument)."""
+    families: tuple[tuple[str, str], ...] = ()  # (tap_name, family)
+    collect: tuple[str, ...] = ()               # taps whose hidden input x to record
+    inject: tuple[str, ...] = ()                # taps with delta injection
+    scale: float = 1.0
+    rank: int = 8
+    hidden: int = 128
+
+    @property
+    def family_map(self) -> dict[str, str]:
+        return dict(self.families)
+
+    def tap_names(self) -> tuple[str, ...]:
+        seen = dict.fromkeys([n for n, _ in self.families])
+        for n in self.collect + self.inject:
+            seen.setdefault(n)
+        return tuple(seen)
+
+    def with_adapters_only(self) -> "ColaSpec":
+        return dataclasses.replace(self, collect=(), inject=())
+
+
+def make_spec(sites: Mapping[str, TapSite] | None = None, *, family: str | None = None,
+              families: Mapping[str, str] | None = None, taps: tuple[str, ...] = (),
+              collect: tuple[str, ...] = (), inject: tuple[str, ...] = (),
+              scale: float = 1.0, rank: int = 8, hidden: int = 128) -> ColaSpec:
+    fam: dict[str, str] = dict(families or {})
+    if family is not None:
+        for t in taps:
+            fam.setdefault(t, family)
+    return ColaSpec(families=tuple(sorted(fam.items())), collect=tuple(collect),
+                    inject=tuple(inject), scale=scale, rank=rank, hidden=hidden)
+
+
+def init_adapter_vars(spec: ColaSpec, sites: Mapping[str, TapSite], key: Array,
+                      dtype=jnp.float32) -> dict:
+    """Initialise {"adapters": {tap: w}} for every adapted tap in spec.
+
+    Stacked sites get a leading (L,) axis on every adapter leaf.
+    """
+    out: dict[str, Any] = {}
+    for i, (name, family) in enumerate(spec.families):
+        site = sites[name]
+        k = jax.random.fold_in(key, i)
+        if site.stacked:
+            ks = jax.random.split(k, site.stacked)
+            w = jax.vmap(lambda kk: adapters_lib.init(
+                family, kk, site.d_in, site.d_out, rank=spec.rank,
+                hidden=spec.hidden, dtype=dtype))(ks)
+        else:
+            w = adapters_lib.init(family, k, site.d_in, site.d_out,
+                                  rank=spec.rank, hidden=spec.hidden, dtype=dtype)
+        out[name] = w
+    return out
+
+
+def zero_delta_vars(spec: ColaSpec, sites: Mapping[str, TapSite],
+                    batch_shape: tuple[int, ...], dtype=jnp.float32) -> dict:
+    """Zero deltas {"tap": (L?, *batch_shape, d_out)} for grad extraction (Mode A)."""
+    out = {}
+    for name in spec.inject:
+        site = sites[name]
+        shape = batch_shape + (site.d_out,)
+        if site.stacked:
+            shape = (site.stacked,) + shape
+        out[name] = jnp.zeros(shape, dtype)
+    return out
+
+
+def slice_layer_vars(cola_vars: dict | None, scanned_prefix: str = "layers.") -> tuple[dict, dict]:
+    """Split cola vars into (scanned, unstacked) parts by tap-name prefix."""
+    if not cola_vars:
+        return {}, {}
+    scanned = {k: v for k, v in cola_vars.items() if k.startswith(scanned_prefix)}
+    rest = {k: v for k, v in cola_vars.items() if not k.startswith(scanned_prefix)}
+    return scanned, rest
+
+
+def apply_tap(spec: ColaSpec | None, name: str, x: Array, y: Array,
+              adapters: Mapping[str, Any] | None = None,
+              deltas: Mapping[str, Any] | None = None) -> tuple[Array, dict[str, Array]]:
+    """Apply adapter/injection at a tap; returns (y', collected_aux).
+
+    ``adapters``/``deltas`` hold the per-call (already layer-sliced) vars.
+    """
+    if spec is None:
+        return y, {}
+    aux: dict[str, Array] = {}
+    if name in spec.collect:
+        aux[name] = x
+    fam = spec.family_map.get(name)
+    if fam is not None and adapters and name in adapters:
+        g = adapters_lib.apply(fam, adapters[name], x)
+        y = y + jnp.asarray(spec.scale, y.dtype) * g.astype(y.dtype)
+    if deltas and name in deltas and name in spec.inject:
+        y = y + deltas[name].astype(y.dtype)
+    return y, aux

@@ -1,0 +1,293 @@
+"""Sharding rules: DP (pod+data), FSDP (params over data), TP (model), EP
+(experts over model), SP (long sequences over model) — with divisibility-guarded
+fallbacks so every assigned arch shards cleanly on the production mesh.
+
+Two mechanisms:
+1. ``params_shardings`` / ``batch_shardings`` / ``cache_shardings`` — explicit
+   NamedShardings for jit in/out_shardings (path-pattern rules).
+2. ``constrain`` — lightweight activation sharding constraints the model code
+   calls at strategic points; a no-op unless an ``activation_rules`` context is
+   active (so CPU tests pay nothing).
+"""
+from __future__ import annotations
+
+import contextlib
+import re
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+PyTree = Any
+
+# ---------------------------------------------------------------------------
+# activation constraints
+# ---------------------------------------------------------------------------
+
+_RULES: list["ActivationRules"] = []
+
+
+class ActivationRules:
+    def __init__(self, mesh: Mesh, policy: str = "2d"):
+        self.mesh = mesh
+        if policy == "dp":
+            self.batch_axes = tuple(a for a in ("pod", "data", "model")
+                                    if a in mesh.axis_names)
+            self.model_axis = None
+        else:
+            self.batch_axes = tuple(a for a in ("pod", "data")
+                                    if a in mesh.axis_names)
+            self.model_axis = "model" if "model" in mesh.axis_names else None
+
+    def axis_size(self, axes) -> int:
+        if axes is None:
+            return 1
+        if isinstance(axes, str):
+            axes = (axes,)
+        n = 1
+        for a in axes:
+            n *= self.mesh.shape[a]
+        return n
+
+
+@contextlib.contextmanager
+def activation_rules(mesh: Mesh, policy: str = "2d"):
+    _RULES.append(ActivationRules(mesh, policy))
+    try:
+        yield _RULES[-1]
+    finally:
+        _RULES.pop()
+
+
+def current_rules() -> ActivationRules | None:
+    return _RULES[-1] if _RULES else None
+
+
+def constrain(x: jax.Array, *dims: str | None) -> jax.Array:
+    """Constrain x's sharding. dims entries: "batch", "model", None. Dims that
+    don't divide are silently replicated. No-op outside an activation_rules
+    context."""
+    r = current_rules()
+    if r is None:
+        return x
+    spec = []
+    for d, size in zip(dims, x.shape):
+        if d == "batch" and r.batch_axes and size % r.axis_size(r.batch_axes) == 0 and size > 0:
+            spec.append(r.batch_axes)
+        elif d == "model" and r.model_axis and size % r.axis_size(r.model_axis) == 0 and size > 0:
+            spec.append(r.model_axis)
+        else:
+            spec.append(None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(r.mesh, P(*spec)))
+
+
+# ---------------------------------------------------------------------------
+# parameter shardings (path-pattern rules)
+# ---------------------------------------------------------------------------
+
+def _div(n: int, k: int) -> bool:
+    return k > 0 and n % k == 0
+
+
+def _axis(mesh: Mesh, name: str) -> int:
+    return mesh.shape.get(name, 1)
+
+
+def _pick(mesh: Mesh, size: int, *candidates):
+    """First candidate axis (or axis tuple) that divides ``size``."""
+    for cand in candidates:
+        if cand is None:
+            continue
+        axes = (cand,) if isinstance(cand, str) else tuple(cand)
+        if all(a in mesh.axis_names for a in axes):
+            k = 1
+            for a in axes:
+                k *= mesh.shape[a]
+            if _div(size, k):
+                return cand
+    return None
+
+
+def _param_spec(mesh: Mesh, path: str, shape: tuple[int, ...],
+                policy: str = "2d") -> P:
+    """Sharding rule for one parameter leaf, identified by its dotted path."""
+    nd = len(shape)
+    if policy == "dp":
+        fs = ("data", "model")   # pure-DP: FSDP over both axes, no TP
+        mdl = None
+    else:
+        fs = "data"   # FSDP axis (within-pod; pods replicate frozen base params)
+        mdl = "model"
+
+    def spec_nd(*tail):
+        """Pad with leading Nones for stacked (L, ...) leaves."""
+        lead = nd - len(tail)
+        return P(*([None] * lead + list(tail)))
+
+    # embeddings / heads ----------------------------------------------------
+    if re.search(r"(embed|unembed)\.emb$", path):
+        v, d = shape[-2], shape[-1]
+        return spec_nd(_pick(mesh, v, (mdl, fs), mdl, fs), None)
+    if path.endswith("lm_head.w"):
+        return spec_nd(_pick(mesh, shape[-2], fs), _pick(mesh, shape[-1], mdl))
+    # attention ---------------------------------------------------------------
+    if re.search(r"attn\.(q|k|v)\.w$", path):
+        return spec_nd(_pick(mesh, shape[-2], fs), _pick(mesh, shape[-1], mdl))
+    if path.endswith("attn.o.w"):
+        return spec_nd(_pick(mesh, shape[-2], mdl), _pick(mesh, shape[-1], fs))
+    # dense mlp ---------------------------------------------------------------
+    if re.search(r"mlp\.(gate|up)\.w$", path):
+        return spec_nd(_pick(mesh, shape[-2], fs), _pick(mesh, shape[-1], mdl))
+    if path.endswith("mlp.down.w"):
+        return spec_nd(_pick(mesh, shape[-2], mdl), _pick(mesh, shape[-1], fs))
+    # moe ---------------------------------------------------------------------
+    if path.endswith("router.w"):
+        return spec_nd(None, None)
+    if re.search(r"moe\.(gate|up)$", path):
+        return spec_nd(_pick(mesh, shape[-3], mdl), _pick(mesh, shape[-2], fs), None)
+    if path.endswith("moe.down"):
+        return spec_nd(_pick(mesh, shape[-3], mdl), None, _pick(mesh, shape[-1], fs))
+    # ssm ---------------------------------------------------------------------
+    if path.endswith("ssm.in_proj.w"):
+        return spec_nd(_pick(mesh, shape[-2], fs), None)
+    if path.endswith("ssm.out_proj.w"):
+        return spec_nd(_pick(mesh, shape[-2], mdl), _pick(mesh, shape[-1], fs))
+    # everything small (norms, conv, biases, A_log, D) ------------------------
+    return P(*([None] * nd))
+
+
+def _adapter_spec(mesh: Mesh, path: str, shape: tuple[int, ...],
+                  policy: str = "2d") -> P:
+    nd = len(shape)
+    if policy == "dp":
+        fs, mdl = ("data", "model"), None
+    else:
+        fs, mdl = "data", "model"
+
+    def spec_nd(*tail):
+        lead = nd - len(tail)
+        return P(*([None] * lead + list(tail)))
+
+    if path.endswith(".A"):        # (L?, d_in, r)
+        return spec_nd(_pick(mesh, shape[-2], fs), None)
+    if path.endswith(".B"):        # (L?, r, d_out)
+        return spec_nd(None, _pick(mesh, shape[-1], mdl))
+    if path.endswith(".W"):        # linear (L?, d_in, d_out)
+        return spec_nd(_pick(mesh, shape[-2], fs), _pick(mesh, shape[-1], mdl))
+    if path.endswith(".W1"):
+        return spec_nd(_pick(mesh, shape[-2], fs), None)
+    if path.endswith(".W2"):
+        return spec_nd(None, _pick(mesh, shape[-1], mdl))
+    return P(*([None] * nd))
+
+
+def _path_str(key_path) -> str:
+    parts = []
+    for k in key_path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return ".".join(parts)
+
+
+def params_shardings(mesh: Mesh, params_shapes: PyTree,
+                     adapter: bool = False, policy: str = "2d") -> PyTree:
+    """NamedShardings for a params(-shaped) pytree. ``params_shapes`` may hold
+    arrays or ShapeDtypeStructs."""
+    rule = _adapter_spec if adapter else _param_spec
+
+    def one(key_path, leaf):
+        spec = rule(mesh, _path_str(key_path), tuple(leaf.shape), policy)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(one, params_shapes)
+
+
+# ---------------------------------------------------------------------------
+# batch / cache / delta shardings
+# ---------------------------------------------------------------------------
+
+def batch_axes(mesh: Mesh, policy: str = "2d") -> tuple[str, ...]:
+    names = ("pod", "data", "model") if policy == "dp" else ("pod", "data")
+    return tuple(a for a in names if a in mesh.axis_names)
+
+
+def batch_shardings(mesh: Mesh, specs: PyTree, policy: str = "2d") -> PyTree:
+    ba = batch_axes(mesh, policy)
+    nb = 1
+    for a in ba:
+        nb *= mesh.shape[a]
+
+    def one(leaf):
+        shape = leaf.shape
+        first = ba if shape and _div(shape[0], nb) else None
+        rest = [None] * (len(shape) - 1)
+        return NamedSharding(mesh, P(first, *rest))
+
+    return jax.tree.map(one, specs)
+
+
+def cache_shardings(mesh: Mesh, cache_specs: PyTree) -> PyTree:
+    """KV caches (L, B, S, K, dh) / ssm states (L, B, H, P, N) / conv states.
+
+    Rule: shard B over batch axes when divisible; otherwise shard the longest
+    remaining dim (sequence for KV, heads for SSM) over model (+ data if batch
+    could not be used) — sequence-parallel decode."""
+    ba = batch_axes(mesh)
+    nb = 1
+    for a in ba:
+        nb *= mesh.shape[a]
+    nm = _axis(mesh, "model")
+
+    def one(leaf):
+        shape = leaf.shape
+        nd = len(shape)
+        spec: list = [None] * nd
+        used_batch = False
+        if nd >= 2 and _div(shape[1], nb):
+            spec[1] = ba
+            used_batch = True
+        # find the best dim to put "model" on: prefer dim2 (seq/heads axis)
+        for i in (2, 3, 4):
+            if i < nd - 0 and spec[i] is None:
+                if not used_batch and _div(shape[i], nm * nb):
+                    spec[i] = tuple(list(ba) + ["model"])
+                    break
+                if _div(shape[i], nm):
+                    spec[i] = "model"
+                    break
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree.map(one, cache_specs)
+
+
+def delta_shardings(mesh: Mesh, delta_specs: PyTree) -> PyTree:
+    """Mode-A deltas (L?, B, S, d_out): batch over (pod,data), d_out over model."""
+    ba = batch_axes(mesh)
+    nb = 1
+    for a in ba:
+        nb *= mesh.shape[a]
+    nm = _axis(mesh, "model")
+
+    def one(leaf):
+        shape = leaf.shape
+        nd = len(shape)
+        spec: list = [None] * nd
+        b_axis = nd - 3
+        if _div(shape[b_axis], nb):
+            spec[b_axis] = ba
+        if _div(shape[-1], nm):
+            spec[-1] = "model"
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree.map(one, delta_specs)
+
+
+def replicated(mesh: Mesh, tree: PyTree) -> PyTree:
+    return jax.tree.map(
+        lambda leaf: NamedSharding(mesh, P(*([None] * len(leaf.shape)))), tree)

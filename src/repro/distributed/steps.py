@@ -1,0 +1,181 @@
+"""pjit step builders: sharded train_step / serve_step for every (arch, mode).
+
+These are the functions the dry-run lowers and the launcher runs. All of them
+wrap the same ``repro.core.gl`` math used by the single-host session — the
+distribution layer adds shardings, never changes semantics.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro import flags
+from repro.configs.base import ColaConfig, ModelConfig
+from repro.core import gl
+from repro.core import taps as taps_lib
+from repro.distributed import sharding as sh
+from repro.models import model as model_lib
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# shape-only param/adapters trees (no allocation — dry-run safe)
+# ---------------------------------------------------------------------------
+
+def shaped_params(cfg: ModelConfig):
+    return jax.eval_shape(lambda: model_lib.init(cfg, jax.random.PRNGKey(0)))
+
+
+def shaped_adapters(cfg: ModelConfig, cc: ColaConfig):
+    if cc.mode in ("ft", "frozen"):
+        return {}
+    return jax.eval_shape(
+        lambda: gl.init_adapters(cfg, cc, jax.random.PRNGKey(0),
+                                 dtype=jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# train step
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg: ModelConfig, cc: ColaConfig, mesh: Mesh):
+    """Returns (fn, in_shardings, donate) for jax.jit; fn signature depends on
+    mode:
+      fused_fit / lora : fn(params, adapters, batch) -> (loss, adapter_grads)
+      faithful_offload : fn(params, adapters, batch) -> (loss, adaptation_data)
+      ft               : fn(params, batch) -> (loss, param_grads)
+    """
+    spec = gl.make_spec(cfg, cc)
+
+    if cc.mode == "ft":
+        def fn_ft(params, batch):
+            with sh.activation_rules(mesh, cfg.shard_policy):
+                loss, grads, _ = gl.train_step_ft(cfg, params, batch)
+            return loss, grads
+
+        ps = sh.params_shardings(mesh, shaped_params(cfg),
+                                 policy=cfg.shard_policy)
+        return fn_ft, (ps, None), ()
+
+    def split_micro(batch):
+        m = cfg.microbatches
+        return jax.tree.map(
+            lambda x: x.reshape(m, x.shape[0] // m, *x.shape[1:]), batch)
+
+    if cc.mode == "faithful_offload":
+        def fn_a(params, adapters, batch):
+            with sh.activation_rules(mesh, cfg.shard_policy):
+                if cfg.microbatches > 1:
+                    def body(carry, b):
+                        loss, data, _ = gl.server_step_a(cfg, spec, params,
+                                                         adapters, b)
+                        return carry + loss, data
+
+                    tot, data = jax.lax.scan(
+                        body, jnp.zeros(()), split_micro(batch),
+                        unroll=flags.scan_unroll())
+                    # data leaves: (M, L?, b, S, d) — per-microbatch adaptation
+                    # data, streamed to the offloader as M pushes.
+                    return tot / cfg.microbatches, data
+                loss, data, _ = gl.server_step_a(cfg, spec, params, adapters,
+                                                 batch)
+            return loss, data
+
+        fn = fn_a
+    else:
+        def fn_b(params, adapters, batch):
+            with sh.activation_rules(mesh, cfg.shard_policy):
+                if cfg.microbatches > 1:
+                    zeros = jax.tree.map(jnp.zeros_like, adapters)
+
+                    def body(carry, b):
+                        tot, acc = carry
+                        loss, grads, _ = gl.train_step_b(cfg, spec, params,
+                                                         adapters, b)
+                        return (tot + loss,
+                                jax.tree.map(jnp.add, acc, grads)), None
+
+                    (tot, acc), _ = jax.lax.scan(
+                        body, (jnp.zeros(()), zeros), split_micro(batch),
+                        unroll=flags.scan_unroll())
+                    m = float(cfg.microbatches)
+                    return tot / m, jax.tree.map(lambda g: g / m, acc)
+                loss, grads, _ = gl.train_step_b(cfg, spec, params, adapters,
+                                                 batch)
+            return loss, grads
+
+        fn = fn_b
+
+    ps = sh.params_shardings(mesh, shaped_params(cfg), policy=cfg.shard_policy)
+    ash = sh.params_shardings(mesh, shaped_adapters(cfg, cc), adapter=True,
+                              policy=cfg.shard_policy)
+    return fn, (ps, ash, None), ()
+
+
+# ---------------------------------------------------------------------------
+# serve step (decode)
+# ---------------------------------------------------------------------------
+
+def make_serve_step(cfg: ModelConfig, mesh: Mesh, greedy: bool = True):
+    """fn(params, cache, batch) -> (tokens|logits, new_cache). Cache donated."""
+
+    def fn(params, cache, batch):
+        with sh.activation_rules(mesh, cfg.shard_policy):
+            logits, cache = model_lib.decode_step(cfg, params, batch, cache)
+        if greedy:
+            out = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        else:
+            out = logits
+        return out, cache
+
+    ps = sh.params_shardings(mesh, shaped_params(cfg), policy=cfg.shard_policy)
+    return fn, ps
+
+
+def serve_shardings(cfg: ModelConfig, mesh: Mesh, batch: int, max_len: int):
+    cache_sh = sh.cache_shardings(mesh, model_lib.cache_specs(cfg, batch, max_len))
+    from repro.configs import registry
+    tok = sh.batch_shardings(mesh, registry.decode_token_specs(cfg, batch),
+                             policy=cfg.shard_policy)
+    return cache_sh, tok
+
+
+# ---------------------------------------------------------------------------
+# prefill step
+# ---------------------------------------------------------------------------
+
+def make_prefill_step(cfg: ModelConfig, mesh: Mesh):
+    def fn(params, batch):
+        with sh.activation_rules(mesh, cfg.shard_policy):
+            return model_lib.prefill(cfg, params, batch)
+
+    ps = sh.params_shardings(mesh, shaped_params(cfg), policy=cfg.shard_policy)
+    return fn, ps
+
+
+def prefill_out_shardings(cfg: ModelConfig, mesh: Mesh, batch: int,
+                          max_len: int):
+    """Logits replicated-ish (tiny); cache sharded like the decode cache so the
+    prefill output feeds serve_step without resharding (and so the stacked KV
+    never materialises replicated when kv-heads don't divide the model axis)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    logits_shape = ((batch, 1, cfg.n_codebooks, cfg.vocab_size)
+                    if cfg.n_codebooks else (batch, 1, cfg.vocab_size))
+    ba = sh.batch_axes(mesh)
+    nb = 1
+    for a in ba:
+        nb *= mesh.shape[a]
+    lspec = [None] * len(logits_shape)
+    if batch % nb == 0:
+        lspec[0] = ba
+    if logits_shape[-1] % mesh.shape.get("model", 1) == 0:
+        lspec[-1] = "model"
+    logits_sh = NamedSharding(mesh, P(*lspec))
+    cache_sh = sh.cache_shardings(mesh, model_lib.cache_specs(cfg, batch,
+                                                              max_len))
+    return logits_sh, cache_sh

@@ -1,0 +1,35 @@
+"""Trace-time flags (module-global, context-managed).
+
+``unroll_scans`` / ``dense_sdpa`` exist for the dry-run *cost pass*: XLA's
+cost_analysis counts a while-loop body ONCE regardless of trip count (verified
+by calibration), so for exact HLO_FLOPs/bytes/collective totals the dry-run
+compiles a second variant with every scan unrolled. The *memory pass* keeps
+scans rolled (the realistic execution schedule for memory_analysis).
+"""
+from __future__ import annotations
+
+import contextlib
+
+_FLAGS = {
+    "unroll_scans": False,   # unroll layer/chunk/loss scans (cost accounting)
+    "dense_sdpa": False,     # use the dense O(S^2) sdpa (loop-free costs)
+}
+
+
+def get(name: str) -> bool:
+    return _FLAGS[name]
+
+
+def scan_unroll() -> bool | int:
+    """Value to pass as lax.scan(unroll=...)."""
+    return True if _FLAGS["unroll_scans"] else 1
+
+
+@contextlib.contextmanager
+def override(**kw):
+    old = {k: _FLAGS[k] for k in kw}
+    _FLAGS.update(kw)
+    try:
+        yield
+    finally:
+        _FLAGS.update(old)

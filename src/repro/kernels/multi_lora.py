@@ -1,0 +1,84 @@
+"""Multi-LoRA kernel (Pallas): per-token adapter-indexed low-rank apply — the
+FTaaS serving hot-spot (K users' adapters inside one decode batch; the BGMV
+problem from Punica/S-LoRA, adapted to TPU).
+
+TPU adaptation: instead of CUDA's per-warp gather of adapter weights, the grid
+iterates (token-block x user); each user's (A_u, B_u) tile is a clean VMEM
+block (index_map on the user axis), the token block computes the full low-rank
+product on the MXU and masks rows that do not belong to user u before
+accumulating. For K ~ tens of users this trades U-fold MXU passes (cheap,
+r << d) for zero irregular memory access (expensive on TPU).
+
+Oracle: repro.kernels.ref.multi_lora.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+
+
+def supported(x, A, B, idx) -> bool:
+    T, d_in = x.shape
+    U, _, r = A.shape
+    d_out = B.shape[-1]
+    if d_in > 8192 or d_out > 8192 or r > 256 or U > 64:
+        return False
+    return T % _block_t(T) == 0
+
+
+def _block_t(t: int) -> int:
+    for b in (256, 128, 64, 32, 16, 8):
+        if t % b == 0 and b <= t:
+            return b
+    return t
+
+
+def _kernel(x_ref, a_ref, b_ref, idx_ref, y_ref, acc_ref, *, scale, block_t):
+    ui = pl.program_id(1)
+
+    @pl.when(ui == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...].astype(jnp.float32)          # (Bt, d_in)
+    a = a_ref[0].astype(jnp.float32)            # (d_in, r)
+    b = b_ref[0].astype(jnp.float32)            # (r, d_out)
+    idx = idx_ref[...]                          # (Bt,)
+
+    xa = jax.lax.dot_general(x, a, (((1,), (0,)), ((), ())))
+    y = jax.lax.dot_general(xa, b, (((1,), (0,)), ((), ())))
+    m = (idx == ui).astype(jnp.float32)[:, None]
+    acc_ref[...] += y * m
+
+    @pl.when(ui == pl.num_programs(1) - 1)
+    def _final():
+        y_ref[...] = (scale * acc_ref[...]).astype(y_ref.dtype)
+
+
+def multi_lora(x: Array, A: Array, B: Array, idx: Array, *, scale: float = 1.0,
+               interpret: bool = False) -> Array:
+    T, d_in = x.shape
+    U, _, r = A.shape
+    d_out = B.shape[-1]
+    bt = _block_t(T)
+    y = pl.pallas_call(
+        functools.partial(_kernel, scale=scale, block_t=bt),
+        grid=(T // bt, U),
+        in_specs=[
+            pl.BlockSpec((bt, d_in), lambda t, u: (t, 0)),
+            pl.BlockSpec((1, d_in, r), lambda t, u: (u, 0, 0)),
+            pl.BlockSpec((1, r, d_out), lambda t, u: (u, 0, 0)),
+            pl.BlockSpec((bt,), lambda t, u: (t,)),
+        ],
+        out_specs=pl.BlockSpec((bt, d_out), lambda t, u: (t, 0)),
+        out_shape=jax.ShapeDtypeStruct((T, d_out), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bt, d_out), jnp.float32)],
+        interpret=interpret,
+    )(x, A, B, idx.astype(jnp.int32))
+    return y

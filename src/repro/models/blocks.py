@@ -1,0 +1,150 @@
+"""Residual blocks for every architecture family.
+
+Block kinds:
+- "attn"  : pre-norm attention + gated-MLP (llama/mistral style); gemma2 adds
+            post-norms, GeGLU, softcap, local/global flavors.
+- "moe"   : attention + routed-expert FFN (qwen3-moe, dbrx).
+- "ssm"   : Mamba2 mixer only (norm + SSD block), no FFN (mamba2 arch).
+- zamba2's shared attention block is an "attn" block applied at multiple depths
+  with shared params (see model.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import ssm as S
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def attn_block_init(cfg: ModelConfig, key: Array, dtype) -> dict:
+    k1, k2 = jax.random.split(key)
+    p = {
+        "ln1": L.rmsnorm_init(cfg.d_model, dtype),
+        "attn": A.attn_init(k1, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                            cfg.d_head, dtype, qk_norm=cfg.qk_norm),
+        "ln2": L.rmsnorm_init(cfg.d_model, dtype),
+    }
+    if cfg.n_experts:
+        p["moe"] = M.moe_init(k2, cfg.d_model, cfg.n_experts, cfg.d_expert, dtype)
+    else:
+        p["mlp"] = L.mlp_init(k2, cfg.d_model, cfg.d_ff, dtype)
+    if cfg.post_norm:
+        p["post_ln1"] = L.rmsnorm_init(cfg.d_model, dtype)
+        p["post_ln2"] = L.rmsnorm_init(cfg.d_model, dtype)
+    return p
+
+
+def ssm_block_init(cfg: ModelConfig, key: Array, dtype) -> dict:
+    return {
+        "ln": L.rmsnorm_init(cfg.d_model, dtype),
+        "ssm": S.ssm_init(key, cfg.d_model, dtype, expand=cfg.ssm_expand,
+                          headdim=cfg.ssm_headdim, state=cfg.ssm_state,
+                          d_conv=cfg.ssm_conv),
+    }
+
+
+# ---------------------------------------------------------------------------
+# full-sequence apply (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _norm(cfg: ModelConfig, p, x):
+    return L.rmsnorm(p, x, eps=cfg.norm_eps, plus_one=cfg.norm_plus_one)
+
+
+def attn_block(cfg: ModelConfig, params: dict, x: Array, positions: Array, *,
+               window: int | None, tap_prefix: str, tap_ctx: tuple | None,
+               return_kv: bool = False):
+    h = _norm(cfg, params["ln1"], x)
+    kv = None
+    kwargs = dict(n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, d_head=cfg.d_head,
+                  rope_theta=cfg.rope_theta, window=window,
+                  softcap=cfg.attn_softcap or None, qk_norm=cfg.qk_norm,
+                  tap_prefix=f"{tap_prefix}.attn", tap_ctx=tap_ctx)
+    if return_kv:
+        h, k, v = A.attention_prefill(params["attn"], h, positions, **kwargs)
+        kv = (k, v)
+    else:
+        h = A.attention(params["attn"], h, positions, **kwargs)
+    if cfg.post_norm:
+        h = _norm(cfg, params["post_ln1"], h)
+    x = x + h
+
+    h = _norm(cfg, params["ln2"], x)
+    moe_aux = jnp.zeros((), jnp.float32)
+    if cfg.n_experts:
+        h, moe_aux = M.moe_block(params["moe"], h, top_k=cfg.moe_top_k,
+                                 impl=cfg.moe_impl, group=cfg.moe_group,
+                                 capacity_factor=cfg.capacity_factor)
+    else:
+        h = L.mlp(params["mlp"], h, act=cfg.act,
+                  tap_prefix=f"{tap_prefix}.mlp", tap_ctx=tap_ctx)
+    if cfg.post_norm:
+        h = _norm(cfg, params["post_ln2"], h)
+    x = x + h
+    if return_kv:
+        return x, moe_aux, kv
+    return x, moe_aux
+
+
+def ssm_block(cfg: ModelConfig, params: dict, x: Array, *, tap_prefix: str,
+              tap_ctx: tuple | None, return_state: bool = False):
+    h = _norm(cfg, params["ln"], x)
+    out = S.ssm_block(params["ssm"], h, d_model=cfg.d_model,
+                      expand=cfg.ssm_expand, headdim=cfg.ssm_headdim,
+                      state=cfg.ssm_state, norm_eps=cfg.norm_eps,
+                      chunk=cfg.ssd_chunk, tap_prefix=f"{tap_prefix}.ssm",
+                      tap_ctx=tap_ctx, return_state=return_state)
+    if return_state:
+        y, state = out
+        return x + y, state
+    return x + out
+
+
+# ---------------------------------------------------------------------------
+# decode-step apply
+# ---------------------------------------------------------------------------
+
+def attn_block_decode(cfg: ModelConfig, params: dict, x: Array, k_cache: Array,
+                      v_cache: Array, positions: Array, *, window: int | None,
+                      tap_prefix: str, tap_ctx: tuple | None):
+    h = _norm(cfg, params["ln1"], x)
+    h, k_cache, v_cache = A.attention_decode(
+        params["attn"], h, k_cache, v_cache, positions,
+        n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, d_head=cfg.d_head,
+        rope_theta=cfg.rope_theta, window=window,
+        softcap=cfg.attn_softcap or None, qk_norm=cfg.qk_norm,
+        tap_prefix=f"{tap_prefix}.attn", tap_ctx=tap_ctx)
+    if cfg.post_norm:
+        h = _norm(cfg, params["post_ln1"], h)
+    x = x + h
+    h = _norm(cfg, params["ln2"], x)
+    if cfg.n_experts:
+        h, _ = M.moe_block(params["moe"], h, top_k=cfg.moe_top_k,
+                           impl=cfg.moe_impl, group=cfg.moe_group,
+                           capacity_factor=cfg.capacity_factor)
+    else:
+        h = L.mlp(params["mlp"], h, act=cfg.act,
+                  tap_prefix=f"{tap_prefix}.mlp", tap_ctx=tap_ctx)
+    if cfg.post_norm:
+        h = _norm(cfg, params["post_ln2"], h)
+    return x + h, k_cache, v_cache
+
+
+def ssm_block_decode(cfg: ModelConfig, params: dict, x: Array, conv_state: Array,
+                     ssm_state: Array, *, tap_prefix: str, tap_ctx: tuple | None):
+    h = _norm(cfg, params["ln"], x)
+    y, conv_state, ssm_state = S.ssm_decode_step(
+        params["ssm"], h, conv_state, ssm_state, d_model=cfg.d_model,
+        expand=cfg.ssm_expand, headdim=cfg.ssm_headdim, state=cfg.ssm_state,
+        norm_eps=cfg.norm_eps, tap_prefix=f"{tap_prefix}.ssm", tap_ctx=tap_ctx)
+    return x + y, conv_state, ssm_state

@@ -1,0 +1,133 @@
+"""Primitive layers (pure functions over param pytrees). No flax in this env —
+everything is built from scratch on jnp.
+
+Conventions
+-----------
+- Params are nested dicts of jnp arrays.
+- Dense weights are stored as (d_in, d_out) in ``param_dtype``; compute happens in
+  the activation dtype.
+- Every Dense call may carry a *tap name* (see repro.core.taps) at which ColA can
+  record hidden inputs / apply adapters / inject deltas. ``tap_ctx`` is the 4-tuple
+  ``(spec, adapters, deltas, aux)`` threaded by the model; ``aux`` is a mutable dict
+  the caller owns (function-local, so still functionally pure from jit's view).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import taps as taps_lib
+from repro.distributed.sharding import constrain
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# initialisers
+# ---------------------------------------------------------------------------
+
+def dense_init(key: Array, d_in: int, d_out: int, dtype) -> dict:
+    w = jax.random.normal(key, (d_in, d_out), jnp.float32) * (d_in ** -0.5)
+    return {"w": w.astype(dtype)}
+
+
+def embed_init(key: Array, vocab: int, d: int, dtype) -> dict:
+    return {"emb": (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)}
+
+
+def rmsnorm_init(d: int, dtype) -> dict:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+# ---------------------------------------------------------------------------
+# application
+# ---------------------------------------------------------------------------
+
+def dense(params: dict, x: Array, *, tap: str | None = None,
+          tap_ctx: tuple | None = None) -> Array:
+    """y = x @ W (+ ColA tap application)."""
+    y = x @ params["w"].astype(x.dtype)
+    if tap is not None and tap_ctx is not None:
+        spec, adapters, deltas, aux = tap_ctx
+        y, collected = taps_lib.apply_tap(spec, tap, x, y, adapters, deltas)
+        aux.update(collected)
+    return y
+
+
+def embed(params: dict, ids: Array) -> Array:
+    return params["emb"][ids]
+
+
+def unembed(params: dict, x: Array) -> Array:
+    """Tied unembedding: logits = x @ emb^T, computed in f32 for stability."""
+    return x.astype(jnp.float32) @ params["emb"].astype(jnp.float32).T
+
+
+def rmsnorm(params: dict, x: Array, *, eps: float = 1e-5,
+            plus_one: bool = False) -> Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    scale = params["scale"].astype(jnp.float32)
+    if plus_one:   # gemma-style (1 + scale)
+        scale = 1.0 + scale
+    return (x * scale).astype(dt)
+
+
+def softcap(x: Array, cap: float | None) -> Array:
+    if cap is None or cap <= 0:
+        return x
+    return jnp.tanh(x / cap) * cap
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(d_head: int, theta: float) -> Array:
+    return 1.0 / (theta ** (jnp.arange(0, d_head, 2, dtype=jnp.float32) / d_head))
+
+
+def apply_rope(x: Array, positions: Array, theta: float) -> Array:
+    """x: (..., S, H, Dh); positions: broadcastable to (..., S)."""
+    d_head = x.shape[-1]
+    freqs = rope_freqs(d_head, theta)                     # (Dh/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, Dh/2)
+    cos = jnp.cos(angles)[..., None, :]                   # (..., S, 1, Dh/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# gated MLP (SwiGLU / GeGLU)
+# ---------------------------------------------------------------------------
+
+def mlp_init(key: Array, d_model: int, d_ff: int, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "gate": dense_init(k1, d_model, d_ff, dtype),
+        "up": dense_init(k2, d_model, d_ff, dtype),
+        "down": dense_init(k3, d_ff, d_model, dtype),
+    }
+
+
+def mlp(params: dict, x: Array, *, act: str = "silu",
+        tap_prefix: str | None = None, tap_ctx: tuple | None = None) -> Array:
+    t = (lambda s: f"{tap_prefix}.{s}") if tap_prefix else (lambda s: None)
+    g = dense(params["gate"], x, tap=t("gate"), tap_ctx=tap_ctx)
+    u = dense(params["up"], x, tap=t("up"), tap_ctx=tap_ctx)
+    if act == "silu":
+        h = jax.nn.silu(g) * u
+    elif act == "gelu":
+        h = jax.nn.gelu(g, approximate=True) * u
+    else:
+        raise ValueError(act)
+    if h.ndim == 3:
+        h = constrain(h, "batch", None, "model")
+    y = dense(params["down"], h, tap=t("down"), tap_ctx=tap_ctx)
+    return constrain(y, "batch", None, None) if y.ndim == 3 else y

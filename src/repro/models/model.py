@@ -1,0 +1,599 @@
+"""LM assembly for every architecture family.
+
+Layer plans
+-----------
+- "uniform": one scanned stack of identical blocks ("layers.*" taps) —
+  dense, moe, ssm families.
+- "pairs":   gemma2's alternating local/global — two scanned stacks
+  ("layers_a.*" = local, "layers_b.*" = global), scanned jointly over pairs.
+- "hybrid":  zamba2 — 14 unrolled segments, each = shared attention block
+  ("shared.*" taps, one param set reused at every depth) + a scanned slice of
+  the 81 Mamba2 layers ("layers.*" taps).
+
+Entry points: init, forward, loss_fn, prefill, decode_step, cache_specs,
+init_cache, tap_sites.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro import flags
+from repro.configs.base import ModelConfig
+from repro.core.taps import ColaSpec, TapSite
+from repro.distributed.sharding import constrain
+from repro.models import blocks as B
+from repro.models import layers as L
+from repro.models import ssm as S
+from repro.utils import canonical_dtype
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# layer plan
+# ---------------------------------------------------------------------------
+
+def layer_plan(cfg: ModelConfig):
+    if cfg.family == "hybrid":
+        every = cfg.shared_attn_every
+        starts = list(range(0, cfg.n_layers, every))
+        segs = [(s, min(s + every, cfg.n_layers) - s) for s in starts]
+        return ("hybrid", segs)
+    if cfg.family == "dense" and cfg.attn_pattern == "local_global":
+        assert cfg.n_layers % 2 == 0
+        return ("pairs", cfg.n_layers // 2)
+    kind = "ssm" if cfg.family == "ssm" else "attn"
+    return ("uniform", kind)
+
+
+def _tree_slice(tree, start, end):
+    return jax.tree.map(lambda a: a[start:end], tree)
+
+
+def _subvars(d: dict | None, prefix: str) -> dict:
+    if not d:
+        return {}
+    return {k: v for k, v in d.items() if k.startswith(prefix + ".")}
+
+
+def _checkpointed(cfg: ModelConfig, fn):
+    if cfg.remat == "full":
+        return jax.checkpoint(fn, policy=jax.checkpoint_policies.nothing_saveable)
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# tap sites
+# ---------------------------------------------------------------------------
+
+def _attn_sites(cfg: ModelConfig, prefix: str, stacked: int) -> dict[str, TapSite]:
+    sites = {}
+    for nm, din, dout in [
+        ("attn.q", cfg.d_model, cfg.n_heads * cfg.d_head),
+        ("attn.k", cfg.d_model, cfg.n_kv_heads * cfg.d_head),
+        ("attn.v", cfg.d_model, cfg.n_kv_heads * cfg.d_head),
+        ("attn.o", cfg.n_heads * cfg.d_head, cfg.d_model),
+    ]:
+        full = f"{prefix}.{nm}"
+        sites[full] = TapSite(full, din, dout, stacked)
+    if cfg.d_ff:
+        for nm, din, dout in [
+            ("mlp.gate", cfg.d_model, cfg.d_ff),
+            ("mlp.up", cfg.d_model, cfg.d_ff),
+            ("mlp.down", cfg.d_ff, cfg.d_model),
+        ]:
+            full = f"{prefix}.{nm}"
+            sites[full] = TapSite(full, din, dout, stacked)
+    return sites
+
+
+def _ssm_sites(cfg: ModelConfig, prefix: str, stacked: int) -> dict[str, TapSite]:
+    dims = S.ssm_dims(cfg.d_model, expand=cfg.ssm_expand,
+                      headdim=cfg.ssm_headdim, state=cfg.ssm_state)
+    d_in_proj = 2 * dims["d_inner"] + 2 * dims["state"] + dims["nheads"]
+    return {
+        f"{prefix}.ssm.in": TapSite(f"{prefix}.ssm.in", cfg.d_model, d_in_proj, stacked),
+        f"{prefix}.ssm.out": TapSite(f"{prefix}.ssm.out", dims["d_inner"],
+                                     cfg.d_model, stacked),
+    }
+
+
+def delta_shape(cfg: ModelConfig, site: TapSite, batch: int, seq: int) -> tuple:
+    """Shape of the Mode-A injected delta for one tap. Stacked sites carry the
+    layer axis; zamba2's shared block carries one slot per invocation (so each
+    call site gets its own grad, per the chain rule over shared parameters)."""
+    base = (batch, seq, site.d_out)
+    if site.stacked:
+        return (site.stacked,) + base
+    if site.name.startswith("shared."):
+        n_seg = len(layer_plan(cfg)[1])
+        return (n_seg,) + base
+    return base
+
+
+def tap_sites(cfg: ModelConfig) -> dict[str, TapSite]:
+    plan = layer_plan(cfg)
+    if plan[0] == "uniform" and plan[1] == "attn":
+        return _attn_sites(cfg, "layers", cfg.n_layers)
+    if plan[0] == "uniform" and plan[1] == "ssm":
+        return _ssm_sites(cfg, "layers", cfg.n_layers)
+    if plan[0] == "pairs":
+        sites = _attn_sites(cfg, "layers_a", plan[1])
+        sites.update(_attn_sites(cfg, "layers_b", plan[1]))
+        return sites
+    if plan[0] == "hybrid":
+        sites = _ssm_sites(cfg, "layers", cfg.n_layers)
+        sites.update(_attn_sites(cfg, "shared", 0))
+        return sites
+    raise ValueError(plan)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _stacked_init(n: int, fn, key):
+    return jax.vmap(fn)(jax.random.split(key, n))
+
+
+def init(cfg: ModelConfig, key: Array) -> dict:
+    dt = canonical_dtype(cfg.param_dtype)
+    keys = jax.random.split(key, 8)
+    params: dict[str, Any] = {}
+
+    # embeddings / head
+    if cfg.n_codebooks:
+        emb = (jax.random.normal(keys[0], (cfg.n_codebooks, cfg.vocab_size,
+                                           cfg.d_model), jnp.float32) * 0.02)
+        params["embed"] = {"emb": emb.astype(dt)}
+        params["lm_head"] = L.dense_init(keys[1], cfg.d_model,
+                                         cfg.n_codebooks * cfg.vocab_size, dt)
+    elif cfg.embed_input:
+        params["unembed"] = L.embed_init(keys[0], cfg.vocab_size, cfg.d_model, dt)
+    else:
+        params["embed"] = L.embed_init(keys[0], cfg.vocab_size, cfg.d_model, dt)
+        if not cfg.tie_embeddings:
+            params["lm_head"] = L.dense_init(keys[1], cfg.d_model, cfg.vocab_size, dt)
+
+    plan = layer_plan(cfg)
+    if plan[0] == "uniform":
+        blk = (functools.partial(B.attn_block_init, cfg, dtype=dt)
+               if plan[1] == "attn"
+               else functools.partial(B.ssm_block_init, cfg, dtype=dt))
+        params["layers"] = _stacked_init(cfg.n_layers, lambda k: blk(key=k), keys[2])
+    elif plan[0] == "pairs":
+        half = plan[1]
+        params["layers_a"] = _stacked_init(
+            half, lambda k: B.attn_block_init(cfg, k, dt), keys[2])
+        params["layers_b"] = _stacked_init(
+            half, lambda k: B.attn_block_init(cfg, k, dt), keys[3])
+    else:  # hybrid
+        params["layers"] = _stacked_init(
+            cfg.n_layers, lambda k: B.ssm_block_init(cfg, k, dt), keys[2])
+        params["shared"] = B.attn_block_init(cfg, keys[3], dt)
+
+    params["final_norm"] = L.rmsnorm_init(cfg.d_model, dt)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# embedding / head
+# ---------------------------------------------------------------------------
+
+def embed_tokens(cfg: ModelConfig, params: dict, batch: dict) -> Array:
+    cdt = canonical_dtype(cfg.compute_dtype)
+    if cfg.embed_input:
+        x = batch["embeds"].astype(cdt)
+    elif cfg.n_codebooks:
+        toks = batch["tokens"]                      # (B, S, CB)
+        emb = params["embed"]["emb"]                # (CB, V, d)
+        x = jnp.zeros(toks.shape[:2] + (cfg.d_model,), cdt)
+        for cb in range(cfg.n_codebooks):
+            x = x + emb[cb].astype(cdt)[toks[..., cb]]
+    else:
+        x = params["embed"]["emb"].astype(cdt)[batch["tokens"]]
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, cdt)
+    return constrain(x, "batch", None, None)
+
+
+def head_logits(cfg: ModelConfig, params: dict, h: Array) -> Array:
+    """h: (..., d) -> logits (..., V) or (..., CB, V) for musicgen."""
+    if cfg.n_codebooks:
+        logits = h @ params["lm_head"]["w"].astype(h.dtype)
+        logits = logits.reshape(h.shape[:-1] + (cfg.n_codebooks, cfg.vocab_size))
+    elif cfg.embed_input:
+        logits = h @ params["unembed"]["emb"].astype(h.dtype).T
+    elif cfg.tie_embeddings:
+        logits = h @ params["embed"]["emb"].astype(h.dtype).T
+    else:
+        logits = h @ params["lm_head"]["w"].astype(h.dtype)
+    if cfg.final_softcap:
+        logits = (jnp.tanh(logits.astype(jnp.float32) / cfg.final_softcap)
+                  * cfg.final_softcap).astype(logits.dtype)
+    if logits.ndim == 3:
+        logits = constrain(logits, "batch", None, "model")
+    elif logits.ndim == 4:   # musicgen (B, S, CB, V)
+        logits = constrain(logits, "batch", None, None, "model")
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# layer stacks — full sequence
+# ---------------------------------------------------------------------------
+
+def _scan_stack(cfg: ModelConfig, stack_params, x, positions, spec, adapters,
+                deltas, *, kind: str, prefix: str, window_pattern=None,
+                collect_kv: bool = False, collect_state: bool = False):
+    """Scan a homogeneous stack. Returns (x, ys) with ys per-layer stacked aux."""
+    ad = _subvars(adapters, prefix)
+    de = _subvars(deltas, prefix)
+
+    def compute(x, lp, ad_l, de_l):
+        # sequence parallelism (Megatron-SP): the residual stream between
+        # blocks lives sharded over the model axis; norms/adds run sharded and
+        # GSPMD inserts the gather/scatter pair around attention/mlp. This also
+        # shards the per-layer remat residuals model_axis-ways.
+        x = constrain(x, "batch", "model", None)
+        aux: dict = {}
+        tap_ctx = (spec, ad_l, de_l, aux)
+        y: dict = {}
+        if kind == "attn":
+            out = B.attn_block(cfg, lp, x, positions, window=None,
+                               tap_prefix=prefix, tap_ctx=tap_ctx,
+                               return_kv=collect_kv)
+            if collect_kv:
+                x, moe_aux, (k, v) = out
+                y["k"], y["v"] = k, v
+            else:
+                x, moe_aux = out
+            y["moe_aux"] = moe_aux
+        else:
+            out = B.ssm_block(cfg, lp, x, tap_prefix=prefix, tap_ctx=tap_ctx,
+                              return_state=collect_state)
+            if collect_state:
+                x, st = out
+                y["ssm"], y["conv"] = st["ssm"], st["conv"]
+            else:
+                x = out
+            y["moe_aux"] = jnp.zeros((), jnp.float32)
+        y["collected"] = aux
+        return x, y
+
+    body = _checkpointed(cfg, compute)
+
+    def scan_body(x, xs):
+        lp, ad_l, de_l = xs
+        return body(x, lp, ad_l, de_l)
+
+    return jax.lax.scan(scan_body, x, (stack_params, ad, de),
+                        unroll=flags.scan_unroll())
+
+
+def _scan_pairs(cfg: ModelConfig, params, x, positions, spec, adapters, deltas,
+                *, collect_kv: bool = False):
+    ad_a, de_a = _subvars(adapters, "layers_a"), _subvars(deltas, "layers_a")
+    ad_b, de_b = _subvars(adapters, "layers_b"), _subvars(deltas, "layers_b")
+
+    def compute(x, lp_a, lp_b, ada, dea, adb, deb):
+        x = constrain(x, "batch", "model", None)   # sequence parallelism
+        aux: dict = {}
+        y: dict = {}
+        out = B.attn_block(cfg, lp_a, x, positions, window=cfg.local_window,
+                           tap_prefix="layers_a", tap_ctx=(spec, ada, dea, aux),
+                           return_kv=collect_kv)
+        if collect_kv:
+            x, m1, (ka, va) = out
+            y["ka"], y["va"] = ka, va
+        else:
+            x, m1 = out
+        out = B.attn_block(cfg, lp_b, x, positions, window=None,
+                           tap_prefix="layers_b", tap_ctx=(spec, adb, deb, aux),
+                           return_kv=collect_kv)
+        if collect_kv:
+            x, m2, (kb, vb) = out
+            y["kb"], y["vb"] = kb, vb
+        else:
+            x, m2 = out
+        y["moe_aux"] = m1 + m2
+        y["collected"] = aux
+        return x, y
+
+    body = _checkpointed(cfg, compute)
+
+    def scan_body(x, xs):
+        lp_a, lp_b, ada, dea, adb, deb = xs
+        return body(x, lp_a, lp_b, ada, dea, adb, deb)
+
+    return jax.lax.scan(scan_body, x,
+                        (params["layers_a"], params["layers_b"],
+                         ad_a, de_a, ad_b, de_b),
+                        unroll=flags.scan_unroll())
+
+
+def _run_hybrid(cfg: ModelConfig, params, x, positions, spec, adapters, deltas,
+                *, collect_kv: bool = False, collect_state: bool = False):
+    """Zamba2: unrolled segments of (shared attn block + mamba slice)."""
+    _, segs = layer_plan(cfg)
+    sh_ad = _subvars(adapters, "shared")
+    sh_de = _subvars(deltas, "shared")   # leaves: (n_seg, B, S, d) per invocation
+    seg_ys, shared_kvs, collected_shared = [], [], []
+    for i, (start, ln) in enumerate(segs):
+        aux: dict = {}
+        sh_de_i = {k: v[i] for k, v in sh_de.items()}
+        out = B.attn_block(cfg, params["shared"], x, positions, window=None,
+                           tap_prefix="shared",
+                           tap_ctx=(spec, sh_ad, sh_de_i, aux),
+                           return_kv=collect_kv)
+        if collect_kv:
+            x, _, kv = out
+            shared_kvs.append(kv)
+        else:
+            x, _ = out
+        collected_shared.append(aux)
+        seg_params = _tree_slice(params["layers"], start, start + ln)
+        seg_ad = jax.tree.map(lambda a: a[start:start + ln],
+                              _subvars(adapters, "layers"))
+        seg_de = jax.tree.map(lambda a: a[start:start + ln],
+                              _subvars(deltas, "layers"))
+        x, ys = _scan_stack(cfg, seg_params, x, positions, spec,
+                            {**seg_ad}, {**seg_de}, kind="ssm", prefix="layers",
+                            collect_state=collect_state)
+        seg_ys.append(ys)
+    ys = jax.tree.map(lambda *a: jnp.concatenate(a, axis=0), *seg_ys)
+    # shared-block collected taps: sum of hidden inputs is NOT meaningful; keep
+    # them stacked per invocation: {tap: (n_seg, B, S, d)}
+    if collected_shared and collected_shared[0]:
+        stacked = {k: jnp.stack([c[k] for c in collected_shared])
+                   for k in collected_shared[0]}
+    else:
+        stacked = {}
+    out_aux = {"collected_shared": stacked}
+    if collect_kv:
+        out_aux["shared_k"] = jnp.stack([kv[0] for kv in shared_kvs])
+        out_aux["shared_v"] = jnp.stack([kv[1] for kv in shared_kvs])
+    return x, ys, out_aux
+
+
+def hidden_states(cfg: ModelConfig, params: dict, batch: dict,
+                  spec: ColaSpec | None = None, cola_vars: dict | None = None,
+                  *, collect_kv: bool = False, collect_state: bool = False):
+    """Run embedding + all layers. Returns (h, aux)."""
+    adapters = (cola_vars or {}).get("adapters", {})
+    deltas = (cola_vars or {}).get("deltas", {})
+    x = embed_tokens(cfg, params, batch)
+    Bz, Ssz = x.shape[0], x.shape[1]
+    positions = jnp.arange(Ssz, dtype=jnp.int32)[None, :]
+    plan = layer_plan(cfg)
+    aux: dict[str, Any] = {}
+    if plan[0] == "uniform":
+        x, ys = _scan_stack(cfg, params["layers"], x, positions, spec, adapters,
+                            deltas, kind=plan[1], prefix="layers",
+                            collect_kv=collect_kv, collect_state=collect_state)
+    elif plan[0] == "pairs":
+        x, ys = _scan_pairs(cfg, params, x, positions, spec, adapters, deltas,
+                            collect_kv=collect_kv)
+    else:
+        x, ys, extra = _run_hybrid(cfg, params, x, positions, spec, adapters,
+                                   deltas, collect_kv=collect_kv,
+                                   collect_state=collect_state)
+        aux.update(extra)
+    aux["moe_aux"] = jnp.mean(ys.pop("moe_aux"))
+    aux["collected"] = ys.pop("collected")
+    aux["stacked"] = ys    # kv / ssm-state per layer when requested
+    x = L.rmsnorm(params["final_norm"], x, eps=cfg.norm_eps,
+                  plus_one=cfg.norm_plus_one)
+    return x, aux
+
+
+def forward(cfg: ModelConfig, params: dict, batch: dict,
+            spec: ColaSpec | None = None, cola_vars: dict | None = None):
+    h, aux = hidden_states(cfg, params, batch, spec, cola_vars)
+    return head_logits(cfg, params, h), aux
+
+
+# ---------------------------------------------------------------------------
+# loss
+# ---------------------------------------------------------------------------
+
+def _ce(logits: Array, labels: Array) -> tuple[Array, Array]:
+    """Sum of CE and count over valid (label >= 0) positions. f32 math."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(lf, axis=-1)
+    ll = jnp.take_along_axis(lf, jnp.clip(labels, 0)[..., None],
+                             axis=-1)[..., 0]
+    valid = labels >= 0
+    ce = jnp.where(valid, lse - ll, 0.0)
+    return jnp.sum(ce), jnp.sum(valid)
+
+
+def lm_loss(cfg: ModelConfig, params: dict, h: Array, labels: Array) -> Array:
+    """CE from hidden states; optionally chunked over sequence so the full
+    (B, S, V) logits tensor is never materialised (memory optimisation)."""
+    Ssz = h.shape[1]
+    if cfg.loss_chunk and Ssz % cfg.loss_chunk == 0 and Ssz > cfg.loss_chunk:
+        nc = Ssz // cfg.loss_chunk
+        hc = h.reshape(h.shape[0], nc, cfg.loss_chunk, h.shape[-1]).swapaxes(0, 1)
+        yc = labels.reshape(labels.shape[0], nc, cfg.loss_chunk,
+                            *labels.shape[2:]).swapaxes(0, 1)
+
+        def body(carry, xs):
+            hh, yy = xs
+            s, n = _ce(head_logits(cfg, params, hh), yy)
+            return (carry[0] + s, carry[1] + n), None
+
+        (tot, cnt), _ = jax.lax.scan(body, (jnp.zeros(()), jnp.zeros(())),
+                                     (hc, yc), unroll=flags.scan_unroll())
+        return tot / jnp.maximum(cnt, 1.0)
+    s, n = _ce(head_logits(cfg, params, h), labels)
+    return s / jnp.maximum(n, 1.0)
+
+
+def loss_fn(cfg: ModelConfig, params: dict, batch: dict,
+            spec: ColaSpec | None = None, cola_vars: dict | None = None):
+    h, aux = hidden_states(cfg, params, batch, spec, cola_vars)
+    loss = lm_loss(cfg, params, h, batch["labels"])
+    if cfg.n_experts:
+        loss = loss + cfg.aux_loss_coef * aux["moe_aux"]
+    return loss, aux
+
+
+# ---------------------------------------------------------------------------
+# caches / decode
+# ---------------------------------------------------------------------------
+
+def cache_specs(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    cdt = canonical_dtype(cfg.compute_dtype)
+    plan = layer_plan(cfg)
+
+    def kv(n):
+        return {"k": jax.ShapeDtypeStruct(
+                    (n, batch, max_len, cfg.n_kv_heads, cfg.d_head), cdt),
+                "v": jax.ShapeDtypeStruct(
+                    (n, batch, max_len, cfg.n_kv_heads, cfg.d_head), cdt)}
+
+    def ssm_states(n):
+        sh = S.ssm_state_shapes(cfg.d_model, batch, expand=cfg.ssm_expand,
+                                headdim=cfg.ssm_headdim, state=cfg.ssm_state,
+                                d_conv=cfg.ssm_conv)
+        return {"conv": jax.ShapeDtypeStruct((n,) + sh["conv"], cdt),
+                "ssm": jax.ShapeDtypeStruct((n,) + sh["ssm"], jnp.float32)}
+
+    if plan[0] == "uniform" and plan[1] == "attn":
+        return {"layers": kv(cfg.n_layers)}
+    if plan[0] == "uniform" and plan[1] == "ssm":
+        return {"layers": ssm_states(cfg.n_layers)}
+    if plan[0] == "pairs":
+        # NOTE: the local stack (a) only ever *reads* a window of the cache; a
+        # rolling window-sized cache is a decode-memory optimisation kept for
+        # the perf loop (needs position-aware RoPE bookkeeping). Baseline uses
+        # the full-length cache for correctness.
+        return {"layers_a": kv(plan[1]), "layers_b": kv(plan[1])}
+    n_seg = len(layer_plan(cfg)[1])
+    return {"layers": ssm_states(cfg.n_layers), "shared": kv(n_seg)}
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        cache_specs(cfg, batch, max_len))
+
+
+def _decode_scan(cfg, stack_params, x, cache, positions, spec, adapters, deltas,
+                 *, kind: str, prefix: str, window):
+    ad = _subvars(adapters, prefix)
+    de = _subvars(deltas, prefix)
+
+    def body(x, xs):
+        lp, c, ad_l, de_l = xs
+        aux: dict = {}
+        tap_ctx = (spec, ad_l, de_l, aux)
+        if kind == "attn":
+            x, k, v = B.attn_block_decode(cfg, lp, x, c["k"], c["v"], positions,
+                                          window=window, tap_prefix=prefix,
+                                          tap_ctx=tap_ctx)
+            return x, {"k": k, "v": v}
+        x, conv, st = B.ssm_block_decode(cfg, lp, x, c["conv"], c["ssm"],
+                                         tap_prefix=prefix, tap_ctx=tap_ctx)
+        return x, {"conv": conv, "ssm": st}
+
+    return jax.lax.scan(body, x, (stack_params, cache, ad, de),
+                        unroll=flags.scan_unroll())
+
+
+def decode_step(cfg: ModelConfig, params: dict, batch: dict, cache: dict,
+                spec: ColaSpec | None = None, cola_vars: dict | None = None):
+    """One decode step. batch: {"tokens": (B,1[,CB]) | "embeds": (B,1,d),
+    "positions": (B,)}. Returns (logits, new_cache)."""
+    adapters = (cola_vars or {}).get("adapters", {})
+    deltas = (cola_vars or {}).get("deltas", {})
+    positions = batch["positions"]
+    x = embed_tokens(cfg, params, batch)
+    plan = layer_plan(cfg)
+    new_cache = dict(cache)
+    if plan[0] == "uniform":
+        x, nc = _decode_scan(cfg, params["layers"], x, cache["layers"],
+                             positions, spec, adapters, deltas, kind=plan[1],
+                             prefix="layers", window=None)
+        new_cache["layers"] = nc
+    elif plan[0] == "pairs":
+        def body(x, xs):
+            lpa, lpb, ca, cb, ada, dea, adb, deb = xs
+            aux: dict = {}
+            x, ka, va = B.attn_block_decode(
+                cfg, lpa, x, ca["k"], ca["v"], positions,
+                window=cfg.local_window, tap_prefix="layers_a",
+                tap_ctx=(spec, ada, dea, aux))
+            x, kb, vb = B.attn_block_decode(
+                cfg, lpb, x, cb["k"], cb["v"], positions, window=None,
+                tap_prefix="layers_b", tap_ctx=(spec, adb, deb, aux))
+            return x, ({"k": ka, "v": va}, {"k": kb, "v": vb})
+
+        ad_a, de_a = _subvars(adapters, "layers_a"), _subvars(deltas, "layers_a")
+        ad_b, de_b = _subvars(adapters, "layers_b"), _subvars(deltas, "layers_b")
+        x, (nca, ncb) = jax.lax.scan(
+            body, x,
+            (params["layers_a"], params["layers_b"], cache["layers_a"],
+             cache["layers_b"], ad_a, de_a, ad_b, de_b),
+            unroll=flags.scan_unroll())
+        new_cache["layers_a"], new_cache["layers_b"] = nca, ncb
+    else:  # hybrid
+        _, segs = layer_plan(cfg)
+        sh_ad = _subvars(adapters, "shared")
+        sh_de = _subvars(deltas, "shared")
+        seg_caches = []
+        shared_k, shared_v = [], []
+        for i, (start, ln) in enumerate(segs):
+            aux: dict = {}
+            x, k, v = B.attn_block_decode(
+                cfg, params["shared"], x, cache["shared"]["k"][i],
+                cache["shared"]["v"][i], positions, window=None,
+                tap_prefix="shared", tap_ctx=(spec, sh_ad, sh_de, aux))
+            shared_k.append(k)
+            shared_v.append(v)
+            seg_params = _tree_slice(params["layers"], start, start + ln)
+            seg_cache = _tree_slice(cache["layers"], start, start + ln)
+            seg_ad = jax.tree.map(lambda a: a[start:start + ln],
+                                  _subvars(adapters, "layers"))
+            seg_de = jax.tree.map(lambda a: a[start:start + ln],
+                                  _subvars(deltas, "layers"))
+            x, nc = _decode_scan(cfg, seg_params, x, seg_cache, positions, spec,
+                                 seg_ad, seg_de, kind="ssm", prefix="layers",
+                                 window=None)
+            seg_caches.append(nc)
+        new_cache["layers"] = jax.tree.map(
+            lambda *a: jnp.concatenate(a, axis=0), *seg_caches)
+        new_cache["shared"] = {"k": jnp.stack(shared_k), "v": jnp.stack(shared_v)}
+
+    x = L.rmsnorm(params["final_norm"], x, eps=cfg.norm_eps,
+                  plus_one=cfg.norm_plus_one)
+    logits = head_logits(cfg, params, x)
+    return logits, new_cache
+
+
+def prefill(cfg: ModelConfig, params: dict, batch: dict,
+            spec: ColaSpec | None = None, cola_vars: dict | None = None):
+    """Full-sequence prefill; returns (logits, cache) with the cache holding the
+    processed sequence (attn KV / ssm states)."""
+    h, aux = hidden_states(cfg, params, batch, spec, cola_vars,
+                           collect_kv=True, collect_state=True)
+    logits = head_logits(cfg, params, h[:, -1:])
+    stacked = aux["stacked"]
+    plan = layer_plan(cfg)
+    if plan[0] == "uniform" and plan[1] == "attn":
+        cache = {"layers": {"k": stacked["k"], "v": stacked["v"]}}
+    elif plan[0] == "uniform" and plan[1] == "ssm":
+        cache = {"layers": {"conv": stacked["conv"], "ssm": stacked["ssm"]}}
+    elif plan[0] == "pairs":
+        cache = {"layers_a": {"k": stacked["ka"], "v": stacked["va"]},
+                 "layers_b": {"k": stacked["kb"], "v": stacked["vb"]}}
+    else:
+        cache = {"layers": {"conv": stacked["conv"], "ssm": stacked["ssm"]},
+                 "shared": {"k": aux["shared_k"], "v": aux["shared_v"]}}
+    return logits, cache

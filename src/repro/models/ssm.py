@@ -1,0 +1,149 @@
+"""Mamba2 (SSD) block: fused in_proj -> causal depthwise conv -> SSD -> gated
+norm -> out_proj. Train path uses the chunked SSD scan; decode path carries
+(conv_state, ssm_state).
+
+ColA taps: ``<prefix>.in`` (d_model -> d_in_proj) and ``<prefix>.out``
+(d_inner -> d_model) — plain Dense sites, mergeable per Prop 2.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.kernels import ops as kernel_ops
+from repro.models import layers as L
+
+Array = jax.Array
+
+
+def ssm_dims(d_model: int, *, expand: int = 2, headdim: int = 64,
+             state: int = 128) -> dict:
+    d_inner = expand * d_model
+    nheads = d_inner // headdim
+    return dict(d_inner=d_inner, nheads=nheads, headdim=headdim, state=state)
+
+
+def ssm_init(key: Array, d_model: int, dtype, *, expand: int = 2,
+             headdim: int = 64, state: int = 128, d_conv: int = 4) -> dict:
+    dims = ssm_dims(d_model, expand=expand, headdim=headdim, state=state)
+    di, H, N = dims["d_inner"], dims["nheads"], dims["state"]
+    d_in_proj = 2 * di + 2 * N + H   # [z, x, B, C, dt]
+    conv_ch = di + 2 * N
+    ks = jax.random.split(key, 4)
+    dt = jnp.exp(jax.random.uniform(ks[2], (H,), jnp.float32) *
+                 (jnp.log(0.1) - jnp.log(0.001)) + jnp.log(0.001))
+    dt_bias = dt + jnp.log(-jnp.expm1(-dt))   # inverse softplus
+    return {
+        "in_proj": L.dense_init(ks[0], d_model, d_in_proj, dtype),
+        "out_proj": L.dense_init(ks[1], di, d_model, dtype),
+        "conv_w": (jax.random.normal(ks[3], (d_conv, conv_ch), jnp.float32)
+                   * (d_conv ** -0.5)).astype(dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "dt_bias": dt_bias.astype(jnp.float32),
+        "A_log": jnp.zeros((H,), jnp.float32),     # A = -exp(A_log) = -1
+        "D": jnp.ones((H,), jnp.float32),
+        "norm": L.rmsnorm_init(di, dtype),
+    }
+
+
+def _causal_conv(x: Array, w: Array, b: Array) -> Array:
+    """Depthwise causal conv. x: (B,S,C); w: (W,C)."""
+    W = w.shape[0]
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    xf = x.astype(jnp.float32)
+    wf = w.astype(jnp.float32)
+    for i in range(W):   # W = 4: unrolled shifts
+        shift = W - 1 - i
+        xi = jnp.pad(xf, ((0, 0), (shift, 0), (0, 0)))[:, :xf.shape[1]]
+        out = out + xi * wf[i]
+    return (out + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def _split_proj(zxbcdt: Array, di: int, N: int, H: int):
+    z = zxbcdt[..., :di]
+    x = zxbcdt[..., di:2 * di]
+    Bm = zxbcdt[..., 2 * di:2 * di + N]
+    Cm = zxbcdt[..., 2 * di + N:2 * di + 2 * N]
+    dt = zxbcdt[..., 2 * di + 2 * N:]
+    return z, x, Bm, Cm, dt
+
+
+def ssm_block(params: dict, u: Array, *, d_model: int, expand: int = 2,
+              headdim: int = 64, state: int = 128, norm_eps: float = 1e-5,
+              chunk: int = 128, tap_prefix: str = "ssm",
+              tap_ctx: tuple | None = None,
+              init_state: Array | None = None,
+              return_state: bool = False):
+    """Full-sequence Mamba2 block. u: (B, S, d_model)."""
+    dims = ssm_dims(d_model, expand=expand, headdim=headdim, state=state)
+    di, H, P, N = dims["d_inner"], dims["nheads"], dims["headdim"], dims["state"]
+    Bsz, S, _ = u.shape
+
+    zxbcdt = L.dense(params["in_proj"], u, tap=f"{tap_prefix}.in", tap_ctx=tap_ctx)
+    z, x, Bm, Cm, dt = _split_proj(zxbcdt, di, N, H)
+    xbc_raw = jnp.concatenate([x, Bm, Cm], axis=-1)
+    W = params["conv_w"].shape[0]
+    # conv tail = raw inputs of the last (W-1) positions, padded if S < W-1;
+    # this seeds the decode conv state after a prefill.
+    tail = xbc_raw[:, -(W - 1):]
+    if tail.shape[1] < W - 1:
+        tail = jnp.pad(tail, ((0, 0), (W - 1 - tail.shape[1], 0), (0, 0)))
+    xbc = jax.nn.silu(_causal_conv(xbc_raw, params["conv_w"], params["conv_b"]))
+    x, Bm, Cm = xbc[..., :di], xbc[..., di:di + N], xbc[..., di + N:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])   # (B,S,H)
+    a = -jnp.exp(params["A_log"])
+    xh = constrain(x.reshape(Bsz, S, H, P), "batch", None, "model", None)
+    y, final_state = kernel_ops.ssd(xh, dt, a, Bm, Cm,
+                                    params["D"], init_state, chunk=chunk)
+    y = constrain(y, "batch", None, "model", None).reshape(Bsz, S, di)
+    y = L.rmsnorm(params["norm"], y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                  eps=norm_eps)
+    out = L.dense(params["out_proj"], y, tap=f"{tap_prefix}.out", tap_ctx=tap_ctx)
+    if return_state:
+        return out, {"ssm": final_state, "conv": tail}
+    return out
+
+
+def ssm_decode_step(params: dict, u: Array, conv_state: Array, ssm_state: Array,
+                    *, d_model: int, expand: int = 2, headdim: int = 64,
+                    state: int = 128, norm_eps: float = 1e-5,
+                    tap_prefix: str = "ssm", tap_ctx: tuple | None = None):
+    """One-token decode. u: (B, 1, d_model); conv_state: (B, W-1, C);
+    ssm_state: (B, H, P, N). Returns (out, conv_state, ssm_state)."""
+    dims = ssm_dims(d_model, expand=expand, headdim=headdim, state=state)
+    di, H, P, N = dims["d_inner"], dims["nheads"], dims["headdim"], dims["state"]
+    Bsz = u.shape[0]
+
+    zxbcdt = L.dense(params["in_proj"], u[:, 0], tap=f"{tap_prefix}.in",
+                     tap_ctx=tap_ctx)                      # (B, d_in_proj)
+    z, x, Bm, Cm, dt = _split_proj(zxbcdt, di, N, H)
+    xbc = jnp.concatenate([x, Bm, Cm], axis=-1)            # (B, C)
+    # conv over [conv_state ; xbc]
+    w = params["conv_w"].astype(jnp.float32)               # (W, C)
+    hist = jnp.concatenate([conv_state.astype(jnp.float32),
+                            xbc.astype(jnp.float32)[:, None]], axis=1)  # (B,W,C)
+    conv_out = jnp.einsum("bwc,wc->bc", hist, w) + params["conv_b"].astype(jnp.float32)
+    conv_out = jax.nn.silu(conv_out).astype(u.dtype)
+    new_conv_state = hist[:, 1:].astype(conv_state.dtype)
+    x, Bm, Cm = conv_out[..., :di], conv_out[..., di:di + N], conv_out[..., di + N:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])   # (B,H)
+    a = -jnp.exp(params["A_log"])
+    y, ssm_state = kernel_ops.ssd_decode_step(
+        x.reshape(Bsz, H, P), dt, a, Bm, Cm, params["D"], ssm_state)
+    y = y.reshape(Bsz, di)
+    y = L.rmsnorm(params["norm"],
+                  y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                  eps=norm_eps)
+    out = L.dense(params["out_proj"], y, tap=f"{tap_prefix}.out", tap_ctx=tap_ctx)
+    return out[:, None], new_conv_state, ssm_state
+
+
+def ssm_state_shapes(d_model: int, batch: int, *, expand: int = 2,
+                     headdim: int = 64, state: int = 128, d_conv: int = 4) -> dict:
+    dims = ssm_dims(d_model, expand=expand, headdim=headdim, state=state)
+    di, H, P, N = dims["d_inner"], dims["nheads"], dims["headdim"], dims["state"]
+    return {
+        "conv": (batch, d_conv - 1, di + 2 * N),
+        "ssm": (batch, H, P, N),
+    }

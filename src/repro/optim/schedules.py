@@ -1,0 +1,45 @@
+"""LR schedules: linear warmup + {linear, cosine, const} decay (paper Table 5
+uses linear decay with 5% warmup)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def linear_warmup_decay(base_lr: float, total_steps: int, warmup_frac: float = 0.05):
+    warmup = max(1, int(total_steps * warmup_frac))
+
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        w = jnp.minimum(step / warmup, 1.0)
+        decay = jnp.clip((total_steps - step) / max(1, total_steps - warmup), 0.0, 1.0)
+        return base_lr * w * decay
+
+    return fn
+
+
+def cosine_warmup(base_lr: float, total_steps: int, warmup_frac: float = 0.05,
+                  final_frac: float = 0.0):
+    warmup = max(1, int(total_steps * warmup_frac))
+
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        w = jnp.minimum(step / warmup, 1.0)
+        t = jnp.clip((step - warmup) / max(1, total_steps - warmup), 0.0, 1.0)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return base_lr * w * cos
+
+    return fn
+
+
+def const(base_lr: float):
+    return lambda step: jnp.asarray(base_lr, jnp.float32)
+
+
+def make(name: str, base_lr: float, total_steps: int, warmup_frac: float = 0.05):
+    if name == "linear":
+        return linear_warmup_decay(base_lr, total_steps, warmup_frac)
+    if name == "cosine":
+        return cosine_warmup(base_lr, total_steps, warmup_frac)
+    if name == "const":
+        return const(base_lr)
+    raise ValueError(name)

@@ -1,0 +1,142 @@
+"""Checkpointing: atomic, asynchronous, retention-managed, elastic.
+
+Format: one ``.npz`` per checkpoint holding the flattened pytree (keys are
+dotted paths) + a JSON meta sidecar. Writes go to a temp file and are
+``os.replace``d into place, so a crash mid-write never corrupts the latest
+checkpoint. ``save_async`` runs the serialisation on a worker thread so the
+train loop's dispatch is never blocked (overlap with the next step's compute).
+
+Elastic restore: arrays are stored unsharded (host RAM); ``restore`` returns
+numpy trees that can be ``device_put`` onto ANY mesh — growing or shrinking the
+cluster between runs only changes the shardings applied on load.
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+import time
+from typing import Any
+
+import jax
+import numpy as np
+
+from repro.utils import flatten_dict, unflatten_dict
+
+PyTree = Any
+
+
+# NOTE: tap names contain dots ("layers.attn.q"), so the flatten separator
+# must be something that cannot appear in a dict key.
+_SEP = "/"
+
+
+def _to_numpy_tree(tree: PyTree) -> dict[str, np.ndarray]:
+    flat = (flatten_dict(tree, sep=_SEP) if isinstance(tree, dict)
+            else {"__root__": tree})
+    out = {}
+    for k, v in flat.items():
+        arr = np.asarray(v)
+        if arr.dtype == np.dtype("bfloat16"):
+            out["bf16::" + k] = arr.view(np.uint16)
+        else:
+            out[k] = arr
+    return out
+
+
+def _from_numpy_tree(d: dict[str, np.ndarray]) -> PyTree:
+    import ml_dtypes
+    out = {}
+    for k, v in d.items():
+        if k.startswith("bf16::"):
+            out[k[len("bf16::"):]] = v.view(ml_dtypes.bfloat16)
+        else:
+            out[k] = v
+    if set(out) == {"__root__"}:
+        return out["__root__"]
+    return unflatten_dict(out, sep=_SEP)
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._thread: threading.Thread | None = None
+        self._error: Exception | None = None
+
+    # -- paths ---------------------------------------------------------
+    def _path(self, step: int) -> str:
+        return os.path.join(self.dir, f"ckpt_{step:010d}.npz")
+
+    def steps(self) -> list[int]:
+        out = []
+        for f in os.listdir(self.dir):
+            if f.startswith("ckpt_") and f.endswith(".npz"):
+                try:
+                    out.append(int(f[5:-4]))
+                except ValueError:
+                    pass
+        return sorted(out)
+
+    def latest_step(self) -> int | None:
+        s = self.steps()
+        return s[-1] if s else None
+
+    # -- save ----------------------------------------------------------
+    def save(self, step: int, tree: PyTree, meta: dict | None = None) -> str:
+        path = self._path(step)
+        tmp = path + f".tmp.{os.getpid()}"
+        with open(tmp, "wb") as f:      # file handle: savez must not append .npz
+            np.savez(f, **_to_numpy_tree(tree))
+        os.replace(tmp, path)
+        with open(path + ".meta.json.tmp", "w") as f:
+            json.dump({"step": step, "time": time.time(), **(meta or {})}, f)
+        os.replace(path + ".meta.json.tmp", path + ".meta.json")
+        self._gc()
+        return path
+
+    def save_async(self, step: int, tree: PyTree, meta: dict | None = None):
+        """Snapshot to host (blocks only for device->host copy), then write on
+        a background thread."""
+        self.wait()
+        host_tree = jax.tree.map(np.asarray, tree)
+        self._thread = threading.Thread(
+            target=self._save_guarded, args=(step, host_tree, meta), daemon=True)
+        self._thread.start()
+
+    def _save_guarded(self, step, tree, meta):
+        try:
+            self.save(step, tree, meta)
+        except Exception as e:  # surfaced on next wait()
+            self._error = e
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def _gc(self):
+        steps = self.steps()
+        for s in steps[:-self.keep] if self.keep else []:
+            for suffix in (".npz", ".npz.meta.json"):
+                try:
+                    os.remove(os.path.join(self.dir, f"ckpt_{s:010d}" + suffix))
+                except OSError:
+                    pass
+
+    # -- restore ---------------------------------------------------------
+    def restore(self, step: int | None = None,
+                shardings: PyTree | None = None) -> tuple[int, PyTree] | None:
+        step = self.latest_step() if step is None else step
+        if step is None:
+            return None
+        with np.load(self._path(step), allow_pickle=False) as z:
+            tree = _from_numpy_tree({k: z[k] for k in z.files})
+        if shardings is not None:
+            tree = jax.tree.map(lambda x, s: jax.device_put(x, s), tree,
+                                shardings)
+        return step, tree

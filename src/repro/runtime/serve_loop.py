@@ -1,0 +1,156 @@
+"""Batched serving engine with continuous batching and multi-user adapters —
+the inference half of FTaaS: one base model, K users' adapters applied
+per-request inside one decode batch (multi-LoRA; the ``multi_lora`` Pallas
+kernel's job on TPU).
+
+Design: fixed decode slots. Each slot holds (request id, user id, position,
+done). Admission fills free slots from the queue and runs a single-row prefill
+into the shared cache; every engine tick decodes one token for all live slots.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import gl
+from repro.core import taps as taps_lib
+from repro.models import model as model_lib
+
+Array = jax.Array
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    user: int
+    prompt: np.ndarray          # (P,) int32
+    max_new: int = 16
+    out: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+def stack_user_adapters(adapter_list: list[dict]) -> dict:
+    """K per-user adapter pytrees {tap: {"A": (L?,d,r), "B": ...}} -> multi
+    bank {tap: {"A": (L?,U,d,r), ...}} (user axis after any layer axis)."""
+    out: dict[str, Any] = {}
+    for tap in adapter_list[0]:
+        leaves = {}
+        for name in adapter_list[0][tap]:
+            stacked = jnp.stack([a[tap][name] for a in adapter_list], axis=0)
+            if adapter_list[0][tap][name].ndim > 2:   # (L, d, r) -> (L, U, d, r)
+                stacked = jnp.moveaxis(stacked, 0, 1)
+            leaves[name] = stacked
+        out[tap] = leaves
+    return out
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params: dict, *, slots: int = 8,
+                 max_len: int = 512, user_adapters: list[dict] | None = None,
+                 taps: str = "qv", scale: float = 1.0):
+        self.cfg = cfg
+        self.params = params
+        self.slots = slots
+        self.max_len = max_len
+        self.queue: list[Request] = []
+        self.active: list[Request | None] = [None] * slots
+        self.positions = np.zeros(slots, np.int32)
+        self.users = np.zeros(slots, np.int32)
+        self.cache = model_lib.init_cache(cfg, slots, max_len)
+        self.spec = None
+        self.bank = None
+        if user_adapters:
+            tap_names = gl.select_taps(cfg, taps)
+            self.spec = taps_lib.make_spec(family="multi_lowrank",
+                                           taps=tap_names, scale=scale)
+            self.bank = stack_user_adapters(user_adapters)
+        self._decode = jax.jit(self._decode_fn)
+        self.stats = {"ticks": 0, "tokens": 0, "completed": 0}
+
+    # -- jitted core -----------------------------------------------------
+    def _cola_vars(self, users: Array) -> dict | None:
+        if self.bank is None:
+            return None
+        vars_ = {}
+        for tap, leaves in self.bank.items():
+            entry = dict(leaves)
+            a = leaves["A"]
+            if a.ndim == 4:   # stacked (L, U, d, r): idx must carry the layer
+                entry["idx"] = jnp.broadcast_to(users, (a.shape[0],) + users.shape)
+            else:
+                entry["idx"] = users
+            vars_[tap] = entry
+        return {"adapters": vars_}
+
+    def _decode_fn(self, params, cache, tokens, positions, users):
+        batch = {"tokens": tokens, "positions": positions}
+        logits, cache = model_lib.decode_step(
+            self.cfg, params, batch, cache, self.spec, self._cola_vars(users))
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_tok, cache
+
+    # -- engine ------------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _admit(self) -> None:
+        for i in range(self.slots):
+            if self.active[i] is None and self.queue:
+                req = self.queue.pop(0)
+                self.active[i] = req
+                self.users[i] = req.user
+                # single-row prefill: feed prompt tokens one by one (simple and
+                # correct; a batched prefill path is the obvious optimisation)
+                for t, tok in enumerate(req.prompt[:-1]):
+                    self._feed(i, int(tok), t)
+                self.positions[i] = len(req.prompt) - 1
+                req._last = int(req.prompt[-1])
+
+    def _feed(self, slot: int, token: int, pos: int) -> None:
+        toks = np.zeros((self.slots, 1), np.int32)
+        toks[slot, 0] = token
+        positions = np.full((self.slots,), 0, np.int32)
+        positions[slot] = pos
+        _, self.cache = self._decode(self.params, self.cache,
+                                     jnp.asarray(toks), jnp.asarray(positions),
+                                     jnp.asarray(self.users))
+
+    def tick(self) -> int:
+        """One engine iteration: admit + decode one token for all live slots."""
+        self._admit()
+        live = [i for i, r in enumerate(self.active) if r is not None]
+        if not live:
+            return 0
+        toks = np.zeros((self.slots, 1), np.int32)
+        for i in live:
+            toks[i, 0] = self.active[i]._last
+        nxt, self.cache = self._decode(self.params, self.cache,
+                                       jnp.asarray(toks),
+                                       jnp.asarray(self.positions),
+                                       jnp.asarray(self.users))
+        nxt = np.asarray(nxt)
+        for i in live:
+            req = self.active[i]
+            tok = int(nxt[i])
+            req.out.append(tok)
+            req._last = tok
+            self.positions[i] += 1
+            if len(req.out) >= req.max_new or self.positions[i] >= self.max_len - 1:
+                req.done = True
+                self.stats["completed"] += 1
+                self.active[i] = None
+                self.positions[i] = 0
+        self.stats["ticks"] += 1
+        self.stats["tokens"] += len(live)
+        return len(live)
+
+    def run_until_idle(self, max_ticks: int = 10_000) -> None:
+        for _ in range(max_ticks):
+            if not self.queue and all(r is None for r in self.active):
+                break
+            self.tick()

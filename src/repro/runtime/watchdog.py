@@ -1,0 +1,55 @@
+"""Step-time watchdog: straggler detection + heartbeat for fault tolerance.
+
+At pod scale a straggling host shows up as a step-time outlier; the watchdog
+tracks a robust running median and flags steps slower than ``threshold`` x the
+median. Recovery hooks: callbacks can trigger a checkpoint, drop the offending
+data shard, or request elastic down-scale (the train loop wires these in).
+The heartbeat file lets an external supervisor detect a hung process (the
+standard preemption/зombie pattern on TPU pods).
+"""
+from __future__ import annotations
+
+import collections
+import json
+import os
+import time
+from typing import Callable
+
+
+class Watchdog:
+    def __init__(self, window: int = 50, threshold: float = 3.0,
+                 heartbeat_path: str | None = None,
+                 on_straggler: Callable[[int, float, float], None] | None = None):
+        self.window = window
+        self.threshold = threshold
+        self.heartbeat_path = heartbeat_path
+        self.on_straggler = on_straggler
+        self.durations: collections.deque[float] = collections.deque(maxlen=window)
+        self.stragglers: list[tuple[int, float, float]] = []
+        self._t0: float | None = None
+
+    def start_step(self) -> None:
+        self._t0 = time.perf_counter()
+
+    def end_step(self, step: int) -> float:
+        assert self._t0 is not None, "start_step not called"
+        dt = time.perf_counter() - self._t0
+        self._t0 = None
+        med = self.median()
+        if med is not None and len(self.durations) >= 10 and dt > self.threshold * med:
+            self.stragglers.append((step, dt, med))
+            if self.on_straggler:
+                self.on_straggler(step, dt, med)
+        self.durations.append(dt)
+        if self.heartbeat_path:
+            tmp = self.heartbeat_path + ".tmp"
+            with open(tmp, "w") as f:
+                json.dump({"step": step, "time": time.time(), "dt": dt}, f)
+            os.replace(tmp, self.heartbeat_path)
+        return dt
+
+    def median(self) -> float | None:
+        if not self.durations:
+            return None
+        s = sorted(self.durations)
+        return s[len(s) // 2]

