@@ -15,6 +15,7 @@ SUITES = [
     ("interval", "paper C.4: adaptation interval ablation"),
     ("collaboration", "paper Table 4: K-user collaboration"),
     ("compute_eval", "paper Tables 10-18: computation evaluation"),
+    ("serve_throughput", "FTaaS serving: batched vs single-row prefill"),
     ("kernels_bench", "kernel micro-benchmarks"),
     ("roofline_summary", "dry-run roofline table (reads dryrun_*.jsonl)"),
 ]

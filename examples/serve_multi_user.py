@@ -34,17 +34,29 @@ def main():
         banks.append(sess.adapters)
         print(f"user {user}: trained adapter bank")
 
-    # serving half: both users share one engine + one base model
+    # serving half: both users share one engine + one base model. Admission
+    # drains waiting requests into free slots and prefills them as one padded
+    # batch (submit -> admit -> batched prefill -> decode ticks).
     eng = ServeEngine(cfg, params, slots=4, max_len=128, user_adapters=banks)
     rng = np.random.default_rng(0)
     for rid in range(6):
         eng.submit(Request(rid=rid, user=rid % 2,
-                           prompt=rng.integers(0, cfg.vocab_size, size=8),
+                           prompt=rng.integers(0, cfg.vocab_size, size=32),
                            max_new=8))
     eng.run_until_idle()
     print(f"served {eng.stats['completed']} requests, "
-          f"{eng.stats['tokens']} tokens in {eng.stats['ticks']} ticks "
+          f"{eng.stats['tokens']} tokens in {eng.stats['ticks']} ticks, "
+          f"{eng.stats['prefill_tokens']} prompt tokens in "
+          f"{eng.stats['prefill_calls']} batched prefills "
           f"(continuous batching, per-token adapter routing)")
+    th = eng.throughput()
+    print(f"decode {th['decode_tok_per_s']:.0f} tok/s, "
+          f"prefill {th['prefill_tok_per_s']:.0f} tok/s, "
+          f"mean TTFT {th['mean_ttft']*1e3:.1f} ms")
+    for r in eng.request_stats():
+        print(f"  rid={r['rid']} user={r['user']} prompt={r['prompt_len']} "
+              f"new={r['new_tokens']} ttft={r['ttft']*1e3:.1f}ms "
+              f"latency={r['latency']*1e3:.1f}ms")
 
 
 if __name__ == "__main__":

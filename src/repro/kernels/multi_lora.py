@@ -29,7 +29,7 @@ def supported(x, A, B, idx) -> bool:
     d_out = B.shape[-1]
     if d_in > 8192 or d_out > 8192 or r > 256 or U > 64:
         return False
-    return T % _block_t(T) == 0
+    return T % _block_t(T) == 0 and _block_t(T) <= 256
 
 
 def _block_t(t: int) -> int:
@@ -37,6 +37,25 @@ def _block_t(t: int) -> int:
         if t % b == 0 and b <= t:
             return b
     return t
+
+
+PAD_ALIGN = 128
+
+
+def pad_tokens(x: Array, idx: Array, align: int = PAD_ALIGN):
+    """Pad the token axis to a kernel-friendly multiple (prefill batches are
+    J*P tokens and rarely align). Padding rows carry user id -1, which matches
+    no user block in the kernel mask and therefore contributes zeros; callers
+    slice the output back to the original T. Returns None when already aligned.
+    """
+    from repro.utils import round_up
+    T = x.shape[0]
+    t2 = round_up(T, align)
+    if t2 == T:
+        return None
+    xp = jnp.pad(x, ((0, t2 - T), (0, 0)))
+    ip = jnp.pad(idx.astype(jnp.int32), (0, t2 - T), constant_values=-1)
+    return xp, ip
 
 
 def _kernel(x_ref, a_ref, b_ref, idx_ref, y_ref, acc_ref, *, scale, block_t):

@@ -77,6 +77,14 @@ def multi_lora(x: Array, A: Array, B: Array, idx: Array, scale: float = 1.0) -> 
         from repro.kernels import multi_lora as ml
         if ml.supported(x, A, B, idx):
             return ml.multi_lora(x, A, B, idx, scale=scale, interpret=_interpret())
+        # prefill-shaped dispatch: a (J, P) prompt batch flattens to J*P tokens,
+        # which rarely aligns with the kernel's token blocking. Pad with
+        # no-user rows (idx == -1 contributes zeros) and slice back.
+        padded = ml.pad_tokens(x, idx)
+        if padded is not None and ml.supported(padded[0], A, B, padded[1]):
+            y = ml.multi_lora(padded[0], A, B, padded[1], scale=scale,
+                              interpret=_interpret())
+            return y[:x.shape[0]]
     return ref.multi_lora(x, A, B, idx, scale=scale)
 
 

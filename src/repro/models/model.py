@@ -449,6 +449,14 @@ def loss_fn(cfg: ModelConfig, params: dict, batch: dict,
 # caches / decode
 # ---------------------------------------------------------------------------
 
+def has_recurrent_state(cfg: ModelConfig) -> bool:
+    """True when the decode cache contains recurrent (ssm/conv) state, which —
+    unlike attention KV — cannot be seeded from a right-padded prefill batch
+    (the final state folds in pad tokens)."""
+    plan = layer_plan(cfg)
+    return plan[0] == "hybrid" or (plan[0] == "uniform" and plan[1] == "ssm")
+
+
 def cache_specs(cfg: ModelConfig, batch: int, max_len: int) -> dict:
     cdt = canonical_dtype(cfg.compute_dtype)
     plan = layer_plan(cfg)
@@ -485,8 +493,22 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
                         cache_specs(cfg, batch, max_len))
 
 
+def _mask_cache_rows(live, new, old):
+    """Slot-mask invariant: rows where ``live`` is False keep their old cache.
+
+    ``new``/``old`` are cache pytrees whose leaves carry the batch (slot) axis
+    first; ``live`` is a (B,) bool mask. Without this, a decode step run on
+    behalf of a subset of slots would scatter garbage KV/state into every other
+    slot's row (the dummy token/position fed for non-target rows)."""
+    if live is None:
+        return new
+    return jax.tree.map(
+        lambda n, o: jnp.where(
+            live.reshape((n.shape[0],) + (1,) * (n.ndim - 1)), n, o), new, old)
+
+
 def _decode_scan(cfg, stack_params, x, cache, positions, spec, adapters, deltas,
-                 *, kind: str, prefix: str, window):
+                 *, kind: str, prefix: str, window, live=None):
     ad = _subvars(adapters, prefix)
     de = _subvars(deltas, prefix)
 
@@ -498,19 +520,25 @@ def _decode_scan(cfg, stack_params, x, cache, positions, spec, adapters, deltas,
             x, k, v = B.attn_block_decode(cfg, lp, x, c["k"], c["v"], positions,
                                           window=window, tap_prefix=prefix,
                                           tap_ctx=tap_ctx)
-            return x, {"k": k, "v": v}
+            return x, _mask_cache_rows(live, {"k": k, "v": v}, c)
         x, conv, st = B.ssm_block_decode(cfg, lp, x, c["conv"], c["ssm"],
                                          tap_prefix=prefix, tap_ctx=tap_ctx)
-        return x, {"conv": conv, "ssm": st}
+        return x, _mask_cache_rows(live, {"conv": conv, "ssm": st}, c)
 
     return jax.lax.scan(body, x, (stack_params, cache, ad, de),
                         unroll=flags.scan_unroll())
 
 
 def decode_step(cfg: ModelConfig, params: dict, batch: dict, cache: dict,
-                spec: ColaSpec | None = None, cola_vars: dict | None = None):
+                spec: ColaSpec | None = None, cola_vars: dict | None = None,
+                *, live: Array | None = None):
     """One decode step. batch: {"tokens": (B,1[,CB]) | "embeds": (B,1,d),
-    "positions": (B,)}. Returns (logits, new_cache)."""
+    "positions": (B,)}. Returns (logits, new_cache).
+
+    ``live``: optional (B,) bool mask; cache rows of non-live slots are left
+    untouched (their logits are still computed but carry no meaning). Serving
+    engines must pass this whenever a decode batch contains dead/padding slots.
+    """
     adapters = (cola_vars or {}).get("adapters", {})
     deltas = (cola_vars or {}).get("deltas", {})
     positions = batch["positions"]
@@ -520,7 +548,7 @@ def decode_step(cfg: ModelConfig, params: dict, batch: dict, cache: dict,
     if plan[0] == "uniform":
         x, nc = _decode_scan(cfg, params["layers"], x, cache["layers"],
                              positions, spec, adapters, deltas, kind=plan[1],
-                             prefix="layers", window=None)
+                             prefix="layers", window=None, live=live)
         new_cache["layers"] = nc
     elif plan[0] == "pairs":
         def body(x, xs):
@@ -533,7 +561,8 @@ def decode_step(cfg: ModelConfig, params: dict, batch: dict, cache: dict,
             x, kb, vb = B.attn_block_decode(
                 cfg, lpb, x, cb["k"], cb["v"], positions, window=None,
                 tap_prefix="layers_b", tap_ctx=(spec, adb, deb, aux))
-            return x, ({"k": ka, "v": va}, {"k": kb, "v": vb})
+            return x, (_mask_cache_rows(live, {"k": ka, "v": va}, ca),
+                       _mask_cache_rows(live, {"k": kb, "v": vb}, cb))
 
         ad_a, de_a = _subvars(adapters, "layers_a"), _subvars(deltas, "layers_a")
         ad_b, de_b = _subvars(adapters, "layers_b"), _subvars(deltas, "layers_b")
@@ -555,8 +584,11 @@ def decode_step(cfg: ModelConfig, params: dict, batch: dict, cache: dict,
                 cfg, params["shared"], x, cache["shared"]["k"][i],
                 cache["shared"]["v"][i], positions, window=None,
                 tap_prefix="shared", tap_ctx=(spec, sh_ad, sh_de, aux))
-            shared_k.append(k)
-            shared_v.append(v)
+            masked = _mask_cache_rows(
+                live, {"k": k, "v": v},
+                {"k": cache["shared"]["k"][i], "v": cache["shared"]["v"][i]})
+            shared_k.append(masked["k"])
+            shared_v.append(masked["v"])
             seg_params = _tree_slice(params["layers"], start, start + ln)
             seg_cache = _tree_slice(cache["layers"], start, start + ln)
             seg_ad = jax.tree.map(lambda a: a[start:start + ln],
@@ -565,7 +597,7 @@ def decode_step(cfg: ModelConfig, params: dict, batch: dict, cache: dict,
                                   _subvars(deltas, "layers"))
             x, nc = _decode_scan(cfg, seg_params, x, seg_cache, positions, spec,
                                  seg_ad, seg_de, kind="ssm", prefix="layers",
-                                 window=None)
+                                 window=None, live=live)
             seg_caches.append(nc)
         new_cache["layers"] = jax.tree.map(
             lambda *a: jnp.concatenate(a, axis=0), *seg_caches)
@@ -578,12 +610,26 @@ def decode_step(cfg: ModelConfig, params: dict, batch: dict, cache: dict,
 
 
 def prefill(cfg: ModelConfig, params: dict, batch: dict,
-            spec: ColaSpec | None = None, cola_vars: dict | None = None):
+            spec: ColaSpec | None = None, cola_vars: dict | None = None,
+            *, lengths: Array | None = None):
     """Full-sequence prefill; returns (logits, cache) with the cache holding the
-    processed sequence (attn KV / ssm states)."""
+    processed sequence (attn KV / ssm states).
+
+    ``lengths``: optional (B,) per-row valid prompt lengths for right-padded
+    batches; logits are then gathered at position ``lengths - 1`` per row
+    instead of the last padded position. Causal masking makes every position
+    < lengths[b] independent of the padding, so a padded batched prefill gives
+    each row exactly its unpadded logits.
+    """
     h, aux = hidden_states(cfg, params, batch, spec, cola_vars,
                            collect_kv=True, collect_state=True)
-    logits = head_logits(cfg, params, h[:, -1:])
+    if lengths is None:
+        h_last = h[:, -1:]
+    else:
+        idx = jnp.clip(lengths.astype(jnp.int32) - 1, 0)[:, None, None]
+        h_last = jnp.take_along_axis(
+            h, jnp.broadcast_to(idx, (h.shape[0], 1, h.shape[-1])), axis=1)
+    logits = head_logits(cfg, params, h_last)
     stacked = aux["stacked"]
     plan = layer_plan(cfg)
     if plan[0] == "uniform" and plan[1] == "attn":
@@ -597,3 +643,28 @@ def prefill(cfg: ModelConfig, params: dict, batch: dict,
         cache = {"layers": {"conv": stacked["conv"], "ssm": stacked["ssm"]},
                  "shared": {"k": aux["shared_k"], "v": aux["shared_v"]}}
     return logits, cache
+
+
+def scatter_prefill_cache(cache: dict, pre: dict, slot_ids: Array) -> dict:
+    """Scatter a prefill cache (rows 0..J-1) into a serving slot cache.
+
+    Every leaf carries (stack, batch, ...) leading axes. Attention KV leaves
+    additionally carry a sequence axis (axis 2) of the prefill length S; they
+    are written into slot positions [0, S). State leaves (ssm conv/state) have
+    identical trailing shapes and are written whole. ``slot_ids`` (J,) maps
+    prefill row j -> slot; out-of-range ids are dropped, which is how padding
+    rows of a bucketed prefill batch are discarded.
+
+    Positions >= the row's true prompt length receive pad-token KV. That is
+    safe under the decode overwrite invariant: decode at position p writes the
+    real KV at p before attending, and causal masking hides positions > p.
+    It is NOT safe for recurrent (ssm/conv) state, which is a single final
+    state folded over every input token including padding — rows for models
+    with ``has_recurrent_state(cfg)`` must be prefilled at their exact length.
+    """
+    def upd(c, p):
+        if p.ndim == c.ndim and c.ndim >= 3 and c.shape[2] != p.shape[2]:
+            return c.at[:, slot_ids, :p.shape[2]].set(p, mode="drop")
+        return c.at[:, slot_ids].set(p, mode="drop")
+
+    return jax.tree.map(upd, cache, pre)

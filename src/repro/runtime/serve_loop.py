@@ -4,12 +4,29 @@ per-request inside one decode batch (multi-LoRA; the ``multi_lora`` Pallas
 kernel's job on TPU).
 
 Design: fixed decode slots. Each slot holds (request id, user id, position,
-done). Admission fills free slots from the queue and runs a single-row prefill
-into the shared cache; every engine tick decodes one token for all live slots.
+done). Admission drains up to ``admit_batch`` waiting requests per tick into
+free slots and prefills them **as one padded batch** through
+``model_lib.prefill`` (per-row user-id adapter routing via the multi_lora
+kernel), scattering the resulting KV/state into the slot cache
+(``model_lib.scatter_prefill_cache``). Every engine tick then decodes one
+token for all live slots.
+
+Lifecycle:  submit -> admit (batched prefill into slots) -> decode ticks ->
+complete (slot freed, stats recorded).
+
+Slot-mask invariant: every decode step carries a (slots,) ``live`` mask and
+``model_lib.decode_step`` reverts cache writes of non-live rows, so neither
+admission nor decoding on behalf of a subset of slots can touch another live
+slot's KV (the old single-row prefill clobbered position 0 of every other
+slot — fixed here and guarded by tests/test_serving.py).
+
+The token-by-token single-row path is kept as a reference implementation
+(``prefill_mode="reference"``) for the batched==reference equivalence tests.
 """
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any
 
 import jax
@@ -32,6 +49,24 @@ class Request:
     max_new: int = 16
     out: list = dataclasses.field(default_factory=list)
     done: bool = False
+    # lifecycle timestamps (perf_counter seconds), filled by the engine
+    t_submit: float | None = None
+    t_admit: float | None = None
+    t_first: float | None = None
+    t_done: float | None = None
+
+    @property
+    def ttft(self) -> float | None:
+        """Time to first token, from submission."""
+        if self.t_submit is None or self.t_first is None:
+            return None
+        return self.t_first - self.t_submit
+
+    @property
+    def latency(self) -> float | None:
+        if self.t_submit is None or self.t_done is None:
+            return None
+        return self.t_done - self.t_submit
 
 
 def stack_user_adapters(adapter_list: list[dict]) -> dict:
@@ -49,15 +84,29 @@ def stack_user_adapters(adapter_list: list[dict]) -> dict:
     return out
 
 
+def _bucket(n: int, floor: int = 8) -> int:
+    """Round up to a power of two (>= floor) to bound jit recompilations of the
+    prefill step across varying admitted-batch shapes."""
+    b = floor
+    while b < n:
+        b *= 2
+    return b
+
+
 class ServeEngine:
     def __init__(self, cfg: ModelConfig, params: dict, *, slots: int = 8,
                  max_len: int = 512, user_adapters: list[dict] | None = None,
-                 taps: str = "qv", scale: float = 1.0):
+                 taps: str = "qv", scale: float = 1.0,
+                 prefill_mode: str = "batched", admit_batch: int | None = None):
+        assert prefill_mode in ("batched", "reference"), prefill_mode
         self.cfg = cfg
         self.params = params
         self.slots = slots
         self.max_len = max_len
+        self.prefill_mode = prefill_mode
+        self.admit_batch = admit_batch if admit_batch is not None else slots
         self.queue: list[Request] = []
+        self.finished: list[Request] = []
         self.active: list[Request | None] = [None] * slots
         self.positions = np.zeros(slots, np.int32)
         self.users = np.zeros(slots, np.int32)
@@ -69,8 +118,12 @@ class ServeEngine:
             self.spec = taps_lib.make_spec(family="multi_lowrank",
                                            taps=tap_names, scale=scale)
             self.bank = stack_user_adapters(user_adapters)
+        self._recurrent = model_lib.has_recurrent_state(cfg)
         self._decode = jax.jit(self._decode_fn)
-        self.stats = {"ticks": 0, "tokens": 0, "completed": 0}
+        self._prefill = jax.jit(self._prefill_fn)
+        self.stats = {"ticks": 0, "tokens": 0, "completed": 0, "admitted": 0,
+                      "prefill_calls": 0, "prefill_tokens": 0,
+                      "decode_time": 0.0, "prefill_time": 0.0}
 
     # -- jitted core -----------------------------------------------------
     def _cola_vars(self, users: Array) -> dict | None:
@@ -87,70 +140,171 @@ class ServeEngine:
             vars_[tap] = entry
         return {"adapters": vars_}
 
-    def _decode_fn(self, params, cache, tokens, positions, users):
+    def _decode_fn(self, params, cache, tokens, positions, users, live):
         batch = {"tokens": tokens, "positions": positions}
         logits, cache = model_lib.decode_step(
-            self.cfg, params, batch, cache, self.spec, self._cola_vars(users))
+            self.cfg, params, batch, cache, self.spec, self._cola_vars(users),
+            live=live)
         next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
         return next_tok, cache
 
+    def _prefill_fn(self, params, cache, tokens, users, slot_ids):
+        """Run a padded (J, P) prompt batch through full-sequence prefill and
+        scatter each row's KV/state into its slot. Padding rows carry an
+        out-of-range slot id and are dropped by the scatter."""
+        _, pre = model_lib.prefill(self.cfg, params, {"tokens": tokens},
+                                   self.spec, self._cola_vars(users))
+        return model_lib.scatter_prefill_cache(cache, pre, slot_ids)
+
     # -- engine ------------------------------------------------------------
     def submit(self, req: Request) -> None:
+        req.t_submit = time.perf_counter()
         self.queue.append(req)
 
     def _admit(self) -> None:
+        """Admit up to ``admit_batch`` waiting requests into free slots and
+        prefill their prompts. The batched path pads all admitted prompts to
+        one (J, P) batch and runs a single prefill forward; the reference path
+        feeds tokens one by one through the (live-masked) decode step."""
+        admitted: list[int] = []
+        now = time.perf_counter()
         for i in range(self.slots):
-            if self.active[i] is None and self.queue:
+            if len(admitted) >= self.admit_batch or not self.queue:
+                break
+            if self.active[i] is None:
                 req = self.queue.pop(0)
+                req.t_admit = now
                 self.active[i] = req
                 self.users[i] = req.user
-                # single-row prefill: feed prompt tokens one by one (simple and
-                # correct; a batched prefill path is the obvious optimisation)
-                for t, tok in enumerate(req.prompt[:-1]):
-                    self._feed(i, int(tok), t)
                 self.positions[i] = len(req.prompt) - 1
                 req._last = int(req.prompt[-1])
+                admitted.append(i)
+        if not admitted:
+            return
+        self.stats["admitted"] += len(admitted)
+        # the last prompt token is fed through the first decode tick (it
+        # produces the first output token); prefill covers prompt[:-1].
+        rows = [(i, np.asarray(self.active[i].prompt[:-1], np.int32))
+                for i in admitted]
+        rows = [(i, feed) for i, feed in rows if len(feed)]
+        if not rows:
+            return
+        t0 = time.perf_counter()
+        if self.prefill_mode == "reference":
+            for i, feed in rows:
+                for t, tok in enumerate(feed):
+                    self._feed(i, int(tok), t)
+        else:
+            self._prefill_batch(rows)
+        self.stats["prefill_time"] += time.perf_counter() - t0
+        self.stats["prefill_calls"] += 1
+        self.stats["prefill_tokens"] += sum(len(f) for _, f in rows)
+
+    def _prefill_batch(self, rows: list[tuple[int, np.ndarray]]) -> None:
+        if self._recurrent:
+            # Recurrent (ssm/conv) state folds in every input token, so a
+            # right-padded batch would pollute shorter rows' state: prefill
+            # each row at its exact length (still one forward per prompt
+            # instead of one decode step per token).
+            for i, feed in rows:
+                self.cache = self._prefill(
+                    self.params, self.cache, jnp.asarray(feed[None, :]),
+                    jnp.asarray(self.users[i:i + 1]),
+                    jnp.asarray(np.array([i], np.int32)))
+            return
+        # attention KV: pad-token garbage beyond a row's true length is safe
+        # (decode overwrites position p before attending; causality hides > p),
+        # so bucket shapes to bound jit recompilation. The bucket never
+        # exceeds max_len, which bounds the cache's sequence axis.
+        pmax = min(_bucket(max(len(feed) for _, feed in rows)), self.max_len)
+        j = _bucket(len(rows), floor=1)
+        toks = np.zeros((j, pmax), np.int32)
+        users = np.zeros((j,), np.int32)
+        # padding rows point at slot id == slots (out of range -> dropped)
+        slot_ids = np.full((j,), self.slots, np.int32)
+        for r, (i, feed) in enumerate(rows):
+            toks[r, :len(feed)] = feed
+            users[r] = self.users[i]
+            slot_ids[r] = i
+        self.cache = self._prefill(self.params, self.cache, jnp.asarray(toks),
+                                   jnp.asarray(users), jnp.asarray(slot_ids))
 
     def _feed(self, slot: int, token: int, pos: int) -> None:
+        """Reference single-row prefill step: decode one prompt token into one
+        slot's cache. The live mask confines the cache write to ``slot`` (the
+        unmasked version corrupted position 0 of every other live slot)."""
         toks = np.zeros((self.slots, 1), np.int32)
         toks[slot, 0] = token
-        positions = np.full((self.slots,), 0, np.int32)
+        positions = np.zeros((self.slots,), np.int32)
         positions[slot] = pos
+        live = np.zeros((self.slots,), bool)
+        live[slot] = True
         _, self.cache = self._decode(self.params, self.cache,
                                      jnp.asarray(toks), jnp.asarray(positions),
-                                     jnp.asarray(self.users))
+                                     jnp.asarray(self.users), jnp.asarray(live))
 
     def tick(self) -> int:
         """One engine iteration: admit + decode one token for all live slots."""
         self._admit()
-        live = [i for i, r in enumerate(self.active) if r is not None]
-        if not live:
+        live_idx = [i for i, r in enumerate(self.active) if r is not None]
+        if not live_idx:
             return 0
         toks = np.zeros((self.slots, 1), np.int32)
-        for i in live:
+        live = np.zeros((self.slots,), bool)
+        for i in live_idx:
             toks[i, 0] = self.active[i]._last
+            live[i] = True
+        t0 = time.perf_counter()
         nxt, self.cache = self._decode(self.params, self.cache,
                                        jnp.asarray(toks),
                                        jnp.asarray(self.positions),
-                                       jnp.asarray(self.users))
+                                       jnp.asarray(self.users),
+                                       jnp.asarray(live))
         nxt = np.asarray(nxt)
-        for i in live:
+        now = time.perf_counter()
+        self.stats["decode_time"] += now - t0
+        for i in live_idx:
             req = self.active[i]
             tok = int(nxt[i])
+            if not req.out:
+                req.t_first = now
             req.out.append(tok)
             req._last = tok
             self.positions[i] += 1
             if len(req.out) >= req.max_new or self.positions[i] >= self.max_len - 1:
                 req.done = True
+                req.t_done = now
                 self.stats["completed"] += 1
+                self.finished.append(req)
                 self.active[i] = None
                 self.positions[i] = 0
         self.stats["ticks"] += 1
-        self.stats["tokens"] += len(live)
-        return len(live)
+        self.stats["tokens"] += len(live_idx)
+        return len(live_idx)
 
     def run_until_idle(self, max_ticks: int = 10_000) -> None:
         for _ in range(max_ticks):
             if not self.queue and all(r is None for r in self.active):
                 break
             self.tick()
+
+    # -- stats -------------------------------------------------------------
+    def request_stats(self) -> list[dict]:
+        """Per-completed-request latency metrics (seconds)."""
+        return [{"rid": r.rid, "user": r.user, "prompt_len": len(r.prompt),
+                 "new_tokens": len(r.out), "ttft": r.ttft,
+                 "latency": r.latency} for r in self.finished]
+
+    def throughput(self) -> dict:
+        """Aggregate engine throughput; decode tokens/sec excludes prefill."""
+        dt = self.stats["decode_time"]
+        pt = self.stats["prefill_time"]
+        reqs = self.request_stats()
+        ttfts = [r["ttft"] for r in reqs if r["ttft"] is not None]
+        return {
+            "decode_tok_per_s": self.stats["tokens"] / dt if dt else 0.0,
+            "prefill_tok_per_s": (self.stats["prefill_tokens"] / pt
+                                  if pt else 0.0),
+            "mean_ttft": float(np.mean(ttfts)) if ttfts else None,
+            "completed": self.stats["completed"],
+        }
