@@ -1,0 +1,264 @@
+"""Fault-tolerant offload channel: the reliability layer between the server
+and one user's low-cost fitting device (paper Fig. 1, FTaaS deployment).
+
+`OffloadChannel` wraps an `Offloader` behind an (optional) `FaultInjector` and
+a `RetryPolicy` and enforces four invariants the rest of the stack relies on:
+
+1. **Exactly-once payload delivery.** Every pushed payload carries a sequence
+   id and a checksum; duplicates are discarded, corrupt/NaN copies are nacked
+   and re-sent with exponential backoff, and payloads whose retries are
+   exhausted land in the dead-letter queue instead of a buffer.
+2. **Versioned adapter banks.** Every committed fit bumps ``version``; readers
+   (merged training, the serve engine) can hot-swap on version bumps and never
+   observe a half-applied update.
+3. **Validated commits only.** A returned adapter bank is committed only if
+   every leaf is finite and the update norm against the last-good bank is
+   bounded; anything else is retried (refit is deterministic) and finally
+   rolled back — ``offloader.adapters`` therefore always holds a validated
+   bank.
+4. **Per-user quarantine.** A user whose fit rounds keep failing is
+   quarantined: their bank is frozen at the last-good version and their
+   subsequent payloads are refused, so one poisoned user can never perturb a
+   healthy peer or take down the round. ``reset()`` (the watchdog recovery
+   hook) lifts quarantine after external recovery.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+
+from repro.runtime.faults import (DeadLetter, Delivery, FaultInjector,
+                                  FitTimeout, RetryPolicy, call_with_timeout)
+
+
+def _tree_sums(tree) -> tuple[float, ...]:
+    """Per-leaf float64 content sums — the transfer checksum."""
+    return tuple(float(np.asarray(jax.device_get(l), np.float64).sum())
+                 for l in jax.tree.leaves(tree))
+
+
+def _tree_finite(tree) -> bool:
+    return all(bool(np.isfinite(np.asarray(jax.device_get(l))).all())
+               for l in jax.tree.leaves(tree))
+
+
+def _update_norm(new, old) -> float:
+    sq = 0.0
+    for a, b in zip(jax.tree.leaves(new), jax.tree.leaves(old)):
+        d = (np.asarray(jax.device_get(a), np.float64)
+             - np.asarray(jax.device_get(b), np.float64))
+        sq += float((d * d).sum())
+    return float(np.sqrt(sq))
+
+
+def _checksums_match(got: tuple[float, ...], want: tuple[float, ...]) -> bool:
+    if len(got) != len(want):
+        return False
+    return all(g == w or abs(g - w) <= 1e-6 * max(1.0, abs(w))
+               for g, w in zip(got, want))
+
+
+class OffloadChannel:
+    """Reliable transport + validation around one user's `Offloader`."""
+
+    def __init__(self, offloader, *, user: int = 0,
+                 injector: FaultInjector | None = None,
+                 policy: RetryPolicy | None = None,
+                 max_update_norm: float = 1e4,
+                 quarantine_after: int = 2):
+        self.offloader = offloader
+        self.user = user
+        self.injector = injector
+        self.policy = policy or RetryPolicy()
+        self.max_update_norm = max_update_norm
+        self.quarantine_after = quarantine_after
+
+        self.version = 0
+        self.last_good: dict = offloader.adapters   # validated by construction
+        self.quarantined = False
+        self.dead_letters: list[DeadLetter] = []
+        self._seq = 0
+        self._seen: set[int] = set()
+        self._fail_streak = 0
+        self._rng = np.random.default_rng(np.random.SeedSequence((1337, user)))
+        self.health_counters = {
+            "pushes": 0, "delivered": 0, "send_retries": 0,
+            "dup_discarded": 0, "corrupt_rejected": 0, "nan_rejected": 0,
+            "late_deliveries": 0, "late_dropped": 0, "refused_quarantined": 0,
+            "dead_letters": 0, "fit_attempts": 0, "fits_committed": 0,
+            "fit_timeouts": 0, "fit_errors": 0, "fit_rejected": 0,
+            "rollbacks": 0, "backoff_s": 0.0,
+        }
+
+    # -- convenience -------------------------------------------------------
+    @property
+    def adapters(self) -> dict:
+        """The user's bank. Invariant: only ever a validated, committed bank."""
+        return self.offloader.adapters
+
+    def health(self) -> dict:
+        out = dict(self.health_counters)
+        out.update(version=self.version, quarantined=self.quarantined,
+                   fail_streak=self._fail_streak,
+                   dead_letter_count=len(self.dead_letters))
+        return out
+
+    # -- transport: server -> offload device -------------------------------
+    def _transmit(self, kind: str, obj) -> list[Delivery]:
+        if self.injector is None:
+            return [Delivery(obj)]
+        return self.injector.transmit(self.user, kind, obj)
+
+    def push(self, data: dict[str, tuple]) -> bool:
+        """Ship one batch of adaptation data, retrying transit faults.
+
+        Returns True when exactly one clean copy reached the offload buffers;
+        False when the user is quarantined or retries were exhausted (the
+        payload is then dead-lettered, not silently lost).
+        """
+        h = self.health_counters
+        h["pushes"] += 1
+        if self.quarantined:
+            h["refused_quarantined"] += 1
+            return False
+        seq = self._seq
+        self._seq += 1
+        want = _tree_sums(data)
+        for attempt in range(1, self.policy.max_attempts + 1):
+            accepted = False
+            for d in self._transmit("payload", data):
+                if d.late_ticks > self.policy.timeout_ticks:
+                    h["late_dropped"] += 1    # arrives after the resend window
+                    continue
+                if d.late_ticks:
+                    h["late_deliveries"] += 1
+                if seq in self._seen:         # duplicate of an acked payload
+                    h["dup_discarded"] += 1
+                    accepted = True
+                    continue
+                if not _tree_finite(d.obj):
+                    h["nan_rejected"] += 1
+                    continue
+                if not _checksums_match(_tree_sums(d.obj), want):
+                    h["corrupt_rejected"] += 1
+                    continue
+                self._seen.add(seq)
+                self.offloader.push(d.obj)
+                accepted = True
+            if accepted:
+                h["delivered"] += 1
+                return True
+            h["send_retries"] += 1
+            h["backoff_s"] += self.policy.wait(attempt, self._rng)
+        self.dead_letters.append(DeadLetter(
+            self.user, seq, "payload", "send retries exhausted",
+            self.policy.max_attempts, data))
+        h["dead_letters"] += 1
+        return False
+
+    # -- fit round: offload device -> server --------------------------------
+    def _snapshot(self):
+        off = self.offloader
+        return (off.adapters, off.opt_state,
+                {k: list(v) for k, v in off.buffers.items()}, off._pushes)
+
+    def _restore(self, snap) -> None:
+        off = self.offloader
+        off.adapters, off.opt_state = snap[0], snap[1]
+        off.buffers.clear()
+        off.buffers.update({k: list(v) for k, v in snap[2].items()})
+        off._pushes = snap[3]
+
+    def _validate_bank(self, bank) -> str | None:
+        if not _tree_finite(bank):
+            return "non-finite adapter update"
+        norm = _update_norm(bank, self.last_good)
+        if norm > self.max_update_norm:
+            return f"update norm {norm:.3g} > {self.max_update_norm:.3g}"
+        return None
+
+    def fit_round(self) -> dict | None:
+        """Run the offloaded fit (if due) under timeout/retry/validation.
+
+        Returns the newly committed bank, or None (not due / round failed —
+        in the failure case the offloader is rolled back to the last-good
+        bank and, past ``quarantine_after`` consecutive failures, the user
+        is quarantined).
+        """
+        h = self.health_counters
+        if self.quarantined or not self.offloader.ready:
+            return None
+        snap = self._snapshot()
+        failure = "unknown"
+        for attempt in range(1, self.policy.max_attempts + 1):
+            h["fit_attempts"] += 1
+            try:
+                new = call_with_timeout(self.offloader.maybe_fit,
+                                        self.policy.timeout_s)
+            except FitTimeout:
+                h["fit_timeouts"] += 1
+                failure = "fit timeout"
+                self._restore(snap)
+                h["backoff_s"] += self.policy.wait(attempt, self._rng)
+                continue
+            except Exception as e:  # numerical failure on the fit device
+                h["fit_errors"] += 1
+                failure = f"fit error: {e}"
+                self._restore(snap)
+                h["backoff_s"] += self.policy.wait(attempt, self._rng)
+                continue
+            if new is None:       # raced interval gating; nothing due
+                return None
+            delivered = None
+            for d in self._transmit("adapters", new):
+                if d.late_ticks > self.policy.timeout_ticks:
+                    h["late_dropped"] += 1
+                    continue
+                if d.late_ticks:
+                    h["late_deliveries"] += 1
+                delivered = d.obj if delivered is None else delivered
+            if delivered is None:
+                failure = "adapter return dropped"
+                h["send_retries"] += 1
+                self._restore(snap)    # refit is deterministic; retry whole round
+                h["backoff_s"] += self.policy.wait(attempt, self._rng)
+                continue
+            reason = self._validate_bank(delivered)
+            if reason is not None:
+                h["fit_rejected"] += 1
+                failure = reason
+                self._restore(snap)
+                h["backoff_s"] += self.policy.wait(attempt, self._rng)
+                continue
+            # commit: bump version, snapshot last-good
+            self.offloader.adapters = delivered
+            self.version += 1
+            self.last_good = delivered
+            self._fail_streak = 0
+            h["fits_committed"] += 1
+            return delivered
+        # round failed: roll back to last-good, drop the round's data
+        self._restore(snap)
+        self.offloader.buffers.clear()
+        self.dead_letters.append(DeadLetter(
+            self.user, self._seq, "fit", failure, self.policy.max_attempts))
+        h["dead_letters"] += 1
+        h["rollbacks"] += 1
+        self._fail_streak += 1
+        if self._fail_streak >= self.quarantine_after:
+            self.quarantined = True
+        return None
+
+    # -- recovery (watchdog hook) -------------------------------------------
+    def reset(self) -> None:
+        """Channel reset after external recovery (straggler/hang checkpoint):
+        drop in-flight buffers, restore the last-good bank, lift quarantine.
+        Re-asserting the last-good bank also fences off any zombie fit — a
+        timed-out ``maybe_fit`` keeps running on its abandoned worker thread
+        and may have mutated the offloader after the rollback."""
+        self.offloader.buffers.clear()
+        self.offloader.adapters = self.last_good
+        self.quarantined = False
+        self._fail_streak = 0

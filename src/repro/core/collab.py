@@ -23,6 +23,7 @@ import jax.numpy as jnp
 from repro.configs.base import ColaConfig, ModelConfig
 from repro.core import gl, merge
 from repro.core import taps as taps_lib
+from repro.core.channel import OffloadChannel
 from repro.core.offload import Offloader
 from repro.models import model as model_lib
 from repro.optim import optimizers as optim_lib
@@ -48,7 +49,9 @@ class CollabSession:
 
     def __init__(self, cfg: ModelConfig, cc: ColaConfig, params: dict,
                  key: Array, optimizer=None, lr=1e-3,
-                 families: list[str] | None = None):
+                 families: list[str] | None = None,
+                 injector=None, policy=None, max_update_norm: float = 1e4,
+                 quarantine_after: int = 2):
         assert cc.mode == "faithful_offload" and cc.merged, \
             "collaboration uses merged faithful-offload training (Alg. 1)"
         self.cfg, self.cc = cfg, cc
@@ -66,12 +69,20 @@ class CollabSession:
         optimizer = optimizer or optim_lib.adamw(lr)
         sites = model_lib.tap_sites(cfg)
         self.offloaders = []
+        self.channels: list[OffloadChannel] = []
         for k in range(self.K):
             ad = taps_lib.init_adapter_vars(
                 self.user_specs[k], sites, jax.random.fold_in(key, k))
-            self.offloaders.append(Offloader(
-                self.user_specs[k], ad, optimizer, interval=cc.interval,
-                compress=cc.compress))
+            off = Offloader(self.user_specs[k], ad, optimizer,
+                            interval=cc.interval, compress=cc.compress)
+            self.offloaders.append(off)
+            # each user ships over their own fault domain: one channel per
+            # offloader, so a faulted user degrades alone (quarantine +
+            # rollback) while the round continues with the survivors.
+            self.channels.append(OffloadChannel(
+                off, user=k, injector=injector, policy=policy,
+                max_update_norm=max_update_norm,
+                quarantine_after=quarantine_after))
         self._server = jax.jit(functools.partial(
             gl.server_step_a, cfg, self.server_spec))
         self._merged_cache = None
@@ -90,15 +101,37 @@ class CollabSession:
         return self._merged_cache
 
     def train_step(self, batch: dict, user_ids: Array) -> float:
-        """One FTaaS iteration: merged server pass + per-user offloaded fits."""
+        """One FTaaS iteration: merged server pass + per-user offloaded fits.
+
+        Every user's push/fit goes through their `OffloadChannel`: transit
+        faults are retried, invalid updates are rolled back, and a user whose
+        rounds keep failing is quarantined — the round always completes with
+        the surviving users, and the merged model only ever folds in
+        validated (last-good) banks.
+        """
         self.step_count += 1
         params = self.merged_model()
         loss, data, _ = self._server(params, {}, batch)
         updated = False
         for k in range(self.K):
-            self.offloaders[k].push(mask_user_rows(data, user_ids, k))
-            if self.offloaders[k].maybe_fit() is not None:
+            ch = self.channels[k]
+            ch.push(mask_user_rows(data, user_ids, k))
+            if ch.fit_round() is not None:
                 updated = True
         if updated:
             self._merged_cache = None
         return float(loss)
+
+    # -- fault-tolerance surface ----------------------------------------
+    def bank_versions(self) -> list[int]:
+        return [ch.version for ch in self.channels]
+
+    def channel_health(self) -> dict[int, dict]:
+        return {k: ch.health() for k, ch in enumerate(self.channels)}
+
+    def reset_channels(self) -> None:
+        """Watchdog recovery hook: reset every user's channel (drop in-flight
+        buffers, restore last-good banks, lift quarantine)."""
+        for ch in self.channels:
+            ch.reset()
+        self._merged_cache = None

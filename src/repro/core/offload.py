@@ -112,11 +112,17 @@ class Offloader:
                         jnp.concatenate(ghs, axis=axis))
         return out
 
+    @property
+    def ready(self) -> bool:
+        """True when I batches have accumulated and a fit is due."""
+        return (self._pushes > 0 and self._pushes % self.interval == 0
+                and bool(self.buffers))
+
     # -- fit ----------------------------------------------------------------
     def maybe_fit(self) -> dict | None:
         """Run the offloaded fit if I batches have accumulated. Returns the new
         adapters (to be sent back to the server / merged) or None."""
-        if self._pushes == 0 or self._pushes % self.interval != 0:
+        if not self.ready:
             return None
         data = self._materialise()
         self.adapters, self.opt_state, _ = self._fit(

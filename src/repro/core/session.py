@@ -23,6 +23,7 @@ import jax.numpy as jnp
 from repro.configs.base import ColaConfig, ModelConfig
 from repro.core import gl, merge
 from repro.core import taps as taps_lib
+from repro.core.channel import OffloadChannel
 from repro.core.offload import Offloader
 from repro.models import model as model_lib
 from repro.optim import optimizers as optim_lib
@@ -32,7 +33,8 @@ Array = jax.Array
 
 class ColaSession:
     def __init__(self, cfg: ModelConfig, cc: ColaConfig, params: dict,
-                 key: Array, optimizer=None, lr=1e-3, offload_device=None):
+                 key: Array, optimizer=None, lr=1e-3, offload_device=None,
+                 injector=None, policy=None):
         self.cfg, self.cc = cfg, cc
         self.base_params = params
         self.optimizer = optimizer or optim_lib.adamw(lr)
@@ -54,6 +56,11 @@ class ColaSession:
                                        self.optimizer, interval=cc.interval,
                                        compress=cc.compress,
                                        device=offload_device)
+            # Mode A ships payloads over the (possibly unreliable) offload
+            # transport; the channel adds retry/validation/versioning and is a
+            # pure pass-through when no faults are injected.
+            self.channel = OffloadChannel(self.offloader, user=0,
+                                          injector=injector, policy=policy)
         else:  # lora
             self.opt_state = self.optimizer.init(self.adapters)
 
@@ -95,8 +102,8 @@ class ColaSession:
             params = self._effective_params()
             adapters_in = ({} if cc.merged else self.adapters)
             loss, data, _ = self._server(params, adapters_in, batch)
-            self.offloader.push(data)
-            new = self.offloader.maybe_fit()
+            self.channel.push(data)
+            new = self.channel.fit_round()
             if new is not None:
                 self.adapters = new
                 self._merged_cache = None   # re-merge from pristine base
@@ -127,6 +134,20 @@ class ColaSession:
             grads, self.opt_state, self.adapters)
         self.adapters = optim_lib.apply_updates(self.adapters, updates)
         return float(loss)
+
+    # ------------------------------------------------------------------
+    def reset_channels(self) -> None:
+        """Watchdog recovery hook: drop in-flight offload state, restore the
+        last-good bank, lift quarantine (no-op for channel-less modes)."""
+        ch = getattr(self, "channel", None)
+        if ch is not None:
+            ch.reset()
+            self.adapters = ch.adapters
+            self._merged_cache = None
+
+    def channel_health(self) -> dict:
+        ch = getattr(self, "channel", None)
+        return {0: ch.health()} if ch is not None else {}
 
     # ------------------------------------------------------------------
     def inference_params(self) -> dict:

@@ -1,0 +1,226 @@
+"""Deterministic fault injection + retry policy for the FTaaS offload channel.
+
+ColA's premise is that gradient fitting is decoupled from the server and
+offloaded to low-cost devices — which drop, delay, corrupt and duplicate
+payloads in practice. This module models that unreliable transport so the
+`OffloadChannel` (repro.core.channel) and the chaos suite (tests/test_faults.py)
+can exercise every failure mode reproducibly:
+
+- ``FaultProfile``  : per-user fault probabilities (drop / delay / corrupt /
+                      duplicate / NaN-poison), applied to tap payloads and to
+                      returned adapter banks.
+- ``FaultInjector`` : seeded per-user RNG streams — user k's faults are a pure
+                      function of (seed, k, transmission index), so a faulted
+                      user never perturbs the randomness (or data) of a healthy
+                      one, and every chaos run replays exactly.
+- ``RetryPolicy``   : bounded retries with exponential backoff + jitter, a
+                      wall-clock timeout for offloaded fit calls and a virtual
+                      ``timeout_ticks`` horizon for delayed deliveries.
+- ``DeadLetter``    : record of a payload whose retries were exhausted.
+
+Time is modelled two ways on purpose: *transit* latency is virtual (ticks, so
+tests never sleep), while *compute* hangs are wall-clock (a hung ``maybe_fit``
+is cut off by running it on a worker thread with a timeout).
+"""
+from __future__ import annotations
+
+import concurrent.futures
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# fault taxonomy
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class FaultProfile:
+    """Per-user fault probabilities for one direction of the channel.
+
+    Probabilities are evaluated in order drop -> delay -> duplicate; corrupt
+    and NaN-poison then (independently) mangle whatever is delivered.
+    """
+    drop: float = 0.0          # payload lost in transit (no ack)
+    delay: float = 0.0         # payload arrives ``delay_ticks`` late
+    delay_ticks: int = 1       # lateness of a delayed payload (virtual ticks)
+    duplicate: float = 0.0     # payload delivered twice (same sequence id)
+    corrupt: float = 0.0       # payload values scrambled in transit
+    nan: float = 0.0           # payload poisoned with NaNs
+    corrupt_scale: float = 1e6  # magnitude of corruption noise
+    targets: tuple[str, ...] = ("payload", "adapters")
+
+    def faulty(self) -> bool:
+        return any(p > 0 for p in
+                   (self.drop, self.delay, self.duplicate, self.corrupt,
+                    self.nan))
+
+
+# canonical single-fault profiles for the chaos matrix
+SINGLE_FAULTS = {
+    "drop": FaultProfile(drop=0.4),
+    "delay": FaultProfile(delay=0.5, delay_ticks=1),
+    "corrupt": FaultProfile(corrupt=0.4),
+    "duplicate": FaultProfile(duplicate=0.5),
+    "nan": FaultProfile(nan=0.4),
+}
+
+
+@dataclasses.dataclass
+class Delivery:
+    """One copy of a transmitted object as it arrives at the far end."""
+    obj: Any
+    late_ticks: int = 0        # 0 = on time
+
+
+def _poison_tree(tree, rng: np.random.Generator, scale: float | None):
+    """Corrupt (scale is not None) or NaN-poison (scale is None) one random
+    leaf of a payload pytree — the realistic failure is a flipped page or a
+    bad DMA, not uniform noise over every tensor."""
+    leaves, treedef = jax.tree.flatten(tree)
+    idx = int(rng.integers(len(leaves)))
+
+    def mangle(a):
+        x = np.array(jax.device_get(a), copy=True)
+        if not np.issubdtype(x.dtype, np.floating):
+            return a
+        flat = x.reshape(-1)
+        n = max(1, flat.size // 8)
+        pos = rng.choice(flat.size, size=n, replace=False)
+        if scale is None:
+            flat[pos] = np.nan
+        else:
+            flat[pos] = (rng.standard_normal(n) * scale).astype(x.dtype)
+        return flat.reshape(x.shape)
+
+    leaves = [mangle(l) if i == idx else l for i, l in enumerate(leaves)]
+    return jax.tree.unflatten(treedef, leaves)
+
+
+class FaultInjector:
+    """Seeded, per-user fault injection on channel transmissions.
+
+    ``transmit(user, kind, obj)`` returns the list of `Delivery` copies that
+    reach the far end for this attempt (possibly empty = dropped, possibly
+    two = duplicated, possibly mangled). ``kind`` is "payload" (server ->
+    offload device) or "adapters" (offload device -> server); a profile only
+    applies to kinds listed in its ``targets``.
+    """
+
+    def __init__(self, profiles: dict[int, FaultProfile] | None = None, *,
+                 default: FaultProfile | None = None, seed: int = 0):
+        self.profiles = dict(profiles or {})
+        self.default = default or FaultProfile()
+        self.seed = seed
+        self._rngs: dict[int, np.random.Generator] = {}
+        self.injected = {"drop": 0, "delay": 0, "duplicate": 0, "corrupt": 0,
+                         "nan": 0}
+
+    def profile(self, user: int) -> FaultProfile:
+        return self.profiles.get(user, self.default)
+
+    def _rng(self, user: int) -> np.random.Generator:
+        if user not in self._rngs:
+            self._rngs[user] = np.random.default_rng(
+                np.random.SeedSequence((self.seed, user)))
+        return self._rngs[user]
+
+    def transmit(self, user: int, kind: str, obj: Any) -> list[Delivery]:
+        prof = self.profile(user)
+        if kind not in prof.targets or not prof.faulty():
+            return [Delivery(obj)]
+        rng = self._rng(user)
+        r = rng.random()
+        if r < prof.drop:
+            self.injected["drop"] += 1
+            return []
+        late = 0
+        if r < prof.drop + prof.delay:
+            self.injected["delay"] += 1
+            late = prof.delay_ticks
+        copies = 1
+        if rng.random() < prof.duplicate:
+            self.injected["duplicate"] += 1
+            copies = 2
+        if rng.random() < prof.corrupt:
+            self.injected["corrupt"] += 1
+            obj = _poison_tree(obj, rng, prof.corrupt_scale)
+        if rng.random() < prof.nan:
+            self.injected["nan"] += 1
+            obj = _poison_tree(obj, rng, None)
+        return [Delivery(obj, late_ticks=late) for _ in range(copies)]
+
+
+# ---------------------------------------------------------------------------
+# retry policy + dead letters
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class DeadLetter:
+    user: int
+    seq: int
+    kind: str          # "payload" | "fit"
+    reason: str
+    attempts: int
+    payload: Any = None
+
+
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    """Bounded retries with exponential backoff + jitter.
+
+    ``timeout_s`` bounds one offloaded *fit* call (wall clock; the call runs on
+    a worker thread and is abandoned on timeout). ``timeout_ticks`` bounds how
+    late a delayed *delivery* may arrive and still be accepted. Backoff sleeps
+    go through ``sleep``, which tests replace with a no-op.
+    """
+    max_attempts: int = 4
+    timeout_s: float | None = None
+    timeout_ticks: int = 4
+    backoff_base: float = 0.01
+    backoff_mult: float = 2.0
+    backoff_max: float = 1.0
+    jitter: float = 0.25
+    seed: int = 0
+    sleep: Callable[[float], None] | None = None
+
+    def backoff(self, attempt: int, rng: np.random.Generator) -> float:
+        """Backoff (seconds) before retry ``attempt`` (1-based)."""
+        base = min(self.backoff_base * self.backoff_mult ** (attempt - 1),
+                   self.backoff_max)
+        return float(base * (1.0 + self.jitter * rng.random()))
+
+    def wait(self, attempt: int, rng: np.random.Generator) -> float:
+        dt = self.backoff(attempt, rng)
+        if self.sleep is not None:
+            self.sleep(dt)
+        return dt
+
+
+class FitTimeout(Exception):
+    """An offloaded fit exceeded RetryPolicy.timeout_s."""
+
+
+_EXECUTOR: concurrent.futures.ThreadPoolExecutor | None = None
+
+
+def call_with_timeout(fn: Callable[[], Any], timeout_s: float | None):
+    """Run ``fn`` bounded by ``timeout_s`` (None = unbounded, same thread).
+
+    A timed-out fit keeps running on its worker thread (threads cannot be
+    killed) but the channel stops waiting — the standard hung-RPC pattern.
+    """
+    if timeout_s is None:
+        return fn()
+    global _EXECUTOR
+    if _EXECUTOR is None:
+        _EXECUTOR = concurrent.futures.ThreadPoolExecutor(
+            max_workers=2, thread_name_prefix="offload-fit")
+    fut = _EXECUTOR.submit(fn)
+    try:
+        return fut.result(timeout=timeout_s)
+    except concurrent.futures.TimeoutError as e:
+        fut.cancel()
+        raise FitTimeout(f"offloaded fit exceeded {timeout_s}s") from e

@@ -49,6 +49,8 @@ class Request:
     max_new: int = 16
     out: list = dataclasses.field(default_factory=list)
     done: bool = False
+    # "queued" -> "done" | "rejected:<reason>" (terminal without a slot)
+    status: str = "queued"
     # lifecycle timestamps (perf_counter seconds), filled by the engine
     t_submit: float | None = None
     t_admit: float | None = None
@@ -84,6 +86,21 @@ def stack_user_adapters(adapter_list: list[dict]) -> dict:
     return out
 
 
+def publish_banks(engine: "ServeEngine", channels) -> int:
+    """Install every `OffloadChannel`'s bank that carries a validated version
+    bump into the serving engine (the train -> serve hot-swap path). Channels
+    that are quarantined or stale simply keep serving their last-good bank.
+    Returns the number of banks installed."""
+    installed = 0
+    for ch in channels:
+        if engine.bank_versions is None:
+            break
+        if ch.version > int(engine.bank_versions[ch.user]):
+            if engine.install_adapters(ch.user, ch.adapters, ch.version):
+                installed += 1
+    return installed
+
+
 def _bucket(n: int, floor: int = 8) -> int:
     """Round up to a power of two (>= floor) to bound jit recompilations of the
     prefill step across varying admitted-batch shapes."""
@@ -113,24 +130,33 @@ class ServeEngine:
         self.cache = model_lib.init_cache(cfg, slots, max_len)
         self.spec = None
         self.bank = None
+        self.n_users = 0
+        self.bank_versions: np.ndarray | None = None
         if user_adapters:
             tap_names = gl.select_taps(cfg, taps)
             self.spec = taps_lib.make_spec(family="multi_lowrank",
                                            taps=tap_names, scale=scale)
             self.bank = stack_user_adapters(user_adapters)
+            self.n_users = len(user_adapters)
+            self.bank_versions = np.zeros(self.n_users, np.int64)
         self._recurrent = model_lib.has_recurrent_state(cfg)
         self._decode = jax.jit(self._decode_fn)
         self._prefill = jax.jit(self._prefill_fn)
         self.stats = {"ticks": 0, "tokens": 0, "completed": 0, "admitted": 0,
                       "prefill_calls": 0, "prefill_tokens": 0,
-                      "decode_time": 0.0, "prefill_time": 0.0}
+                      "decode_time": 0.0, "prefill_time": 0.0,
+                      "rejected": 0, "bank_installs": 0, "bank_rejected": 0}
 
     # -- jitted core -----------------------------------------------------
-    def _cola_vars(self, users: Array) -> dict | None:
-        if self.bank is None:
+    # The bank is a jit *argument*, never a closure: a closed-over bank would
+    # be baked into the compiled decode as a trace-time constant, silently
+    # ignoring every later `install_adapters` hot-swap (shapes are stable
+    # across swaps, so passing it as an input costs no recompilation).
+    def _cola_vars(self, bank, users: Array) -> dict | None:
+        if bank is None:
             return None
         vars_ = {}
-        for tap, leaves in self.bank.items():
+        for tap, leaves in bank.items():
             entry = dict(leaves)
             a = leaves["A"]
             if a.ndim == 4:   # stacked (L, U, d, r): idx must carry the layer
@@ -140,26 +166,88 @@ class ServeEngine:
             vars_[tap] = entry
         return {"adapters": vars_}
 
-    def _decode_fn(self, params, cache, tokens, positions, users, live):
+    def _decode_fn(self, params, bank, cache, tokens, positions, users, live):
         batch = {"tokens": tokens, "positions": positions}
         logits, cache = model_lib.decode_step(
-            self.cfg, params, batch, cache, self.spec, self._cola_vars(users),
-            live=live)
+            self.cfg, params, batch, cache, self.spec,
+            self._cola_vars(bank, users), live=live)
         next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
         return next_tok, cache
 
-    def _prefill_fn(self, params, cache, tokens, users, slot_ids):
+    def _prefill_fn(self, params, bank, cache, tokens, users, slot_ids):
         """Run a padded (J, P) prompt batch through full-sequence prefill and
         scatter each row's KV/state into its slot. Padding rows carry an
         out-of-range slot id and are dropped by the scatter."""
         _, pre = model_lib.prefill(self.cfg, params, {"tokens": tokens},
-                                   self.spec, self._cola_vars(users))
+                                   self.spec, self._cola_vars(bank, users))
         return model_lib.scatter_prefill_cache(cache, pre, slot_ids)
 
     # -- engine ------------------------------------------------------------
+    def _validate(self, req: Request) -> str | None:
+        if len(req.prompt) == 0:
+            return "empty prompt"
+        # a prompt occupies positions [0, P); at least one decode tick must fit
+        # below the cache horizon (completion triggers at max_len - 1)
+        if len(req.prompt) > self.max_len - 1:
+            return f"prompt length {len(req.prompt)} > max {self.max_len - 1}"
+        if req.max_new <= 0:
+            return f"max_new must be positive, got {req.max_new}"
+        if self.bank is not None and not 0 <= req.user < self.n_users:
+            return f"unknown user {req.user} (bank has {self.n_users})"
+        return None
+
     def submit(self, req: Request) -> None:
+        """Queue a request — or reject it with a terminal status (bad requests
+        must never crash a tick or occupy a slot)."""
         req.t_submit = time.perf_counter()
+        reason = self._validate(req)
+        if reason is not None:
+            req.status = f"rejected: {reason}"
+            req.done = True
+            req.t_done = req.t_submit
+            self.stats["rejected"] += 1
+            self.finished.append(req)
+            return
         self.queue.append(req)
+
+    # -- adapter bank lifecycle ---------------------------------------------
+    def install_adapters(self, user: int, adapters: dict, version: int) -> bool:
+        """Hot-swap one user's adapters into the serving bank.
+
+        Accepts only *validated version bumps*: the version must exceed the
+        user's installed version and every leaf must be finite — anything else
+        is rejected and the user keeps serving their last-good adapters
+        (graceful degradation for quarantined / stale users). Returns whether
+        the bank was installed.
+        """
+        if self.bank is None or not 0 <= user < self.n_users:
+            self.stats["bank_rejected"] += 1
+            return False
+        if version <= int(self.bank_versions[user]):
+            self.stats["bank_rejected"] += 1   # stale or replayed update
+            return False
+        leaves = jax.tree.leaves(adapters)
+        if not all(bool(jnp.isfinite(l).all()) for l in leaves):
+            self.stats["bank_rejected"] += 1   # unvalidated/poisoned bank
+            return False
+        if set(adapters) != set(self.bank):
+            self.stats["bank_rejected"] += 1   # wrong tap set for this bank
+            return False
+        new_bank = {}
+        for tap, entry in self.bank.items():
+            new_entry = dict(entry)
+            for name, leaf in adapters[tap].items():
+                stacked = self.bank[tap][name]
+                user_slot = ((slice(None), user) if leaf.ndim > 2 else user)
+                if leaf.shape != stacked[user_slot].shape:
+                    self.stats["bank_rejected"] += 1
+                    return False
+                new_entry[name] = stacked.at[user_slot].set(leaf)
+            new_bank[tap] = new_entry
+        self.bank = new_bank
+        self.bank_versions[user] = version
+        self.stats["bank_installs"] += 1
+        return True
 
     def _admit(self) -> None:
         """Admit up to ``admit_batch`` waiting requests into free slots and
@@ -208,7 +296,8 @@ class ServeEngine:
             # instead of one decode step per token).
             for i, feed in rows:
                 self.cache = self._prefill(
-                    self.params, self.cache, jnp.asarray(feed[None, :]),
+                    self.params, self.bank, self.cache,
+                    jnp.asarray(feed[None, :]),
                     jnp.asarray(self.users[i:i + 1]),
                     jnp.asarray(np.array([i], np.int32)))
             return
@@ -226,8 +315,9 @@ class ServeEngine:
             toks[r, :len(feed)] = feed
             users[r] = self.users[i]
             slot_ids[r] = i
-        self.cache = self._prefill(self.params, self.cache, jnp.asarray(toks),
-                                   jnp.asarray(users), jnp.asarray(slot_ids))
+        self.cache = self._prefill(self.params, self.bank, self.cache,
+                                   jnp.asarray(toks), jnp.asarray(users),
+                                   jnp.asarray(slot_ids))
 
     def _feed(self, slot: int, token: int, pos: int) -> None:
         """Reference single-row prefill step: decode one prompt token into one
@@ -239,7 +329,7 @@ class ServeEngine:
         positions[slot] = pos
         live = np.zeros((self.slots,), bool)
         live[slot] = True
-        _, self.cache = self._decode(self.params, self.cache,
+        _, self.cache = self._decode(self.params, self.bank, self.cache,
                                      jnp.asarray(toks), jnp.asarray(positions),
                                      jnp.asarray(self.users), jnp.asarray(live))
 
@@ -255,7 +345,7 @@ class ServeEngine:
             toks[i, 0] = self.active[i]._last
             live[i] = True
         t0 = time.perf_counter()
-        nxt, self.cache = self._decode(self.params, self.cache,
+        nxt, self.cache = self._decode(self.params, self.bank, self.cache,
                                        jnp.asarray(toks),
                                        jnp.asarray(self.positions),
                                        jnp.asarray(self.users),
@@ -273,6 +363,7 @@ class ServeEngine:
             self.positions[i] += 1
             if len(req.out) >= req.max_new or self.positions[i] >= self.max_len - 1:
                 req.done = True
+                req.status = "done"
                 req.t_done = now
                 self.stats["completed"] += 1
                 self.finished.append(req)

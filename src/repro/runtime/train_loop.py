@@ -26,14 +26,15 @@ class TrainLoop:
     def __init__(self, session, data, workdir: str, *, ckpt_every: int = 50,
                  log_every: int = 10, keep: int = 3,
                  eval_fn: Callable[[int], dict] | None = None,
-                 eval_every: int = 0):
+                 eval_every: int = 0, recover_on_straggler: bool = False):
         self.session = session
         self.data = data
         self.workdir = workdir
         os.makedirs(workdir, exist_ok=True)
         self.ckpt = CheckpointManager(os.path.join(workdir, "ckpt"), keep=keep)
         self.watchdog = Watchdog(
-            heartbeat_path=os.path.join(workdir, "heartbeat.json"))
+            heartbeat_path=os.path.join(workdir, "heartbeat.json"),
+            on_straggler=self._on_straggler if recover_on_straggler else None)
         self.ckpt_every = ckpt_every
         self.log_every = log_every
         self.eval_fn = eval_fn
@@ -41,6 +42,18 @@ class TrainLoop:
         self.metrics_path = os.path.join(workdir, "metrics.jsonl")
         self._preempted = False
         self.losses: list[float] = []
+        self.recoveries = 0
+
+    # -- straggler / hang recovery ------------------------------------------
+    def _on_straggler(self, step: int, dt: float, med: float) -> None:
+        """A straggling/hung step signals a sick offload round: checkpoint the
+        last-good state and reset the offload channels (drop in-flight
+        buffers, restore last-good banks, lift quarantine)."""
+        self.recoveries += 1
+        self.ckpt.save_async(step, self._state())
+        reset = getattr(self.session, "reset_channels", None)
+        if reset is not None:
+            reset()
 
     # -- state (de)hydration -------------------------------------------
     def _state(self) -> dict:
@@ -122,9 +135,15 @@ class TrainLoop:
                     break
         self.ckpt.save_async(self.session.step_count, self._state())
         self.ckpt.wait()
-        return {
+        out = {
             "steps": self.session.step_count - start,
             "final_loss": self.losses[-1] if self.losses else None,
             "wall_s": time.time() - t_begin,
             "stragglers": len(self.watchdog.stragglers),
+            "recoveries": self.recoveries,
+            "heartbeat_failures": self.watchdog.stats["heartbeat_failures"],
         }
+        health = getattr(self.session, "channel_health", None)
+        if health is not None:
+            out["channel_health"] = health()
+        return out

@@ -3,9 +3,11 @@
 At pod scale a straggling host shows up as a step-time outlier; the watchdog
 tracks a robust running median and flags steps slower than ``threshold`` x the
 median. Recovery hooks: callbacks can trigger a checkpoint, drop the offending
-data shard, or request elastic down-scale (the train loop wires these in).
-The heartbeat file lets an external supervisor detect a hung process (the
-standard preemption/зombie pattern on TPU pods).
+data shard, reset the offload channels, or request elastic down-scale (the
+train loop wires these in). The heartbeat file lets an external supervisor
+detect a hung process (the standard preemption/zombie pattern on TPU pods);
+heartbeat write failures (full/read-only disk) are counted in ``stats`` rather
+than crashing the training step — losing a heartbeat must never lose the job.
 """
 from __future__ import annotations
 
@@ -14,6 +16,10 @@ import json
 import os
 import time
 from typing import Callable
+
+
+class WatchdogError(RuntimeError):
+    """Watchdog API misuse (e.g. end_step without a matching start_step)."""
 
 
 class Watchdog:
@@ -26,13 +32,16 @@ class Watchdog:
         self.on_straggler = on_straggler
         self.durations: collections.deque[float] = collections.deque(maxlen=window)
         self.stragglers: list[tuple[int, float, float]] = []
+        self.stats = {"heartbeats": 0, "heartbeat_failures": 0}
         self._t0: float | None = None
 
     def start_step(self) -> None:
         self._t0 = time.perf_counter()
 
     def end_step(self, step: int) -> float:
-        assert self._t0 is not None, "start_step not called"
+        if self._t0 is None:
+            raise WatchdogError(
+                "end_step() called without a matching start_step()")
         dt = time.perf_counter() - self._t0
         self._t0 = None
         med = self.median()
@@ -42,10 +51,16 @@ class Watchdog:
                 self.on_straggler(step, dt, med)
         self.durations.append(dt)
         if self.heartbeat_path:
-            tmp = self.heartbeat_path + ".tmp"
-            with open(tmp, "w") as f:
-                json.dump({"step": step, "time": time.time(), "dt": dt}, f)
-            os.replace(tmp, self.heartbeat_path)
+            try:
+                tmp = self.heartbeat_path + ".tmp"
+                with open(tmp, "w") as f:
+                    json.dump({"step": step, "time": time.time(), "dt": dt}, f)
+                os.replace(tmp, self.heartbeat_path)
+                self.stats["heartbeats"] += 1
+            except OSError:
+                # disk full / path gone / read-only fs: a missed heartbeat is
+                # an observability gap, not a training failure
+                self.stats["heartbeat_failures"] += 1
         return dt
 
     def median(self) -> float | None:

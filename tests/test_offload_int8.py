@@ -1,0 +1,125 @@
+"""Offloader ``compress="int8"`` transfer path: quantisation round-trip error
+bound, ``pushed_bytes`` accounting, and fit equivalence against the exact
+(uncompressed) transfer."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.configs.base import ColaConfig
+from repro.core import gl
+from repro.core.offload import Offloader, dequant_int8, quant_int8
+from repro.core.session import ColaSession
+from repro.data.pipeline import SyntheticLM
+from repro.models import model as M
+from repro.optim import optimizers as opt
+
+
+def _mk():
+    cfg = registry.reduced_config("smollm-135m").replace(
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_head=16,
+        d_ff=128, vocab_size=128)
+    key = jax.random.PRNGKey(0)
+    return cfg, M.init(cfg, key), key
+
+
+# ---------------------------------------------------------------------------
+# quant/dequant round trip
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", [(5, 33), (2, 4, 16, 64)])
+def test_int8_roundtrip_error_bound(shape):
+    """Symmetric per-row int8: |x - dq(q(x))| <= scale/2 elementwise, with
+    scale = rowmax|x| / 127 — i.e. worst-case relative error ~0.4% of the
+    row's max magnitude."""
+    x = jax.random.normal(jax.random.PRNGKey(1), shape, jnp.float32) * 3.0
+    q, scale = quant_int8(x)
+    assert q.dtype == jnp.int8
+    assert scale.shape == shape[:-1] + (1,)
+    err = np.abs(np.asarray(dequant_int8(q, scale) - x))
+    bound = np.asarray(scale) / 2.0 + 1e-7
+    assert (err <= bound).all()
+    # exact at the row extremes (they map to +-127 exactly)
+    rows = np.asarray(x).reshape(-1, shape[-1])
+    drows = np.asarray(dequant_int8(q, scale)).reshape(-1, shape[-1])
+    idx = np.abs(rows).argmax(axis=-1)
+    np.testing.assert_allclose(drows[np.arange(len(rows)), idx],
+                               rows[np.arange(len(rows)), idx], rtol=1e-5)
+
+
+def test_int8_zero_and_tiny_rows_are_safe():
+    """All-zero rows must not divide by zero; denormal-tiny rows stay finite."""
+    x = jnp.stack([jnp.zeros(16), jnp.full(16, 1e-30), jnp.ones(16)])
+    q, scale = quant_int8(x)
+    out = np.asarray(dequant_int8(q, scale))
+    assert np.isfinite(out).all()
+    np.testing.assert_array_equal(out[0], np.zeros(16))
+
+
+# ---------------------------------------------------------------------------
+# pushed_bytes accounting
+# ---------------------------------------------------------------------------
+
+def _offloaders(cfg, key, compress):
+    cc = ColaConfig(mode="faithful_offload", family="lowrank", taps="qv",
+                    rank=4, compress=compress)
+    from repro.core import taps as taps_lib
+    from repro.models import model as model_lib
+    taps = gl.select_taps(cfg, cc.taps)
+    spec = taps_lib.make_spec(family=cc.family, taps=taps, rank=cc.rank,
+                              scale=cc.scale)
+    ad = taps_lib.init_adapter_vars(spec, model_lib.tap_sites(cfg), key)
+    return Offloader(spec, ad, opt.sgd(0.1), compress=compress), spec
+
+
+def test_pushed_bytes_accounting():
+    """int8 books 1 byte/element + 4 bytes per row scale; "none" books the
+    raw payload bytes — and int8 actually compresses (~4x for f32)."""
+    cfg, params, key = _mk()
+    data = SyntheticLM(cfg, batch=4, seq=16, seed=0)
+    batch = data.batch_at(0)
+    cc = ColaConfig(mode="faithful_offload", family="lowrank", taps="qv", rank=4)
+    spec = gl.make_spec(cfg, cc)
+    _, payload, _ = gl.server_step_a(cfg, spec, params,
+                                     gl.init_adapters(cfg, cc, key), batch)
+
+    sizes = {}
+    for compress in ("none", "int8"):
+        off, _ = _offloaders(cfg, key, compress)
+        off.push(payload)
+        want = 0
+        for x, gh in payload.values():
+            for a in (x, gh):
+                if compress == "int8":
+                    q, scale = quant_int8(a)
+                    want += int(np.prod(q.shape)) + 4 * int(np.prod(scale.shape))
+                else:
+                    want += a.size * a.dtype.itemsize
+        assert off.stats["pushed_bytes"] == want, compress
+        sizes[compress] = off.stats["pushed_bytes"]
+    assert sizes["int8"] < sizes["none"] / 3
+
+
+# ---------------------------------------------------------------------------
+# fit equivalence: int8 transfer perturbs, but barely
+# ---------------------------------------------------------------------------
+
+def test_int8_fit_close_to_exact():
+    cfg, params, key = _mk()
+    data = SyntheticLM(cfg, batch=4, seq=16, seed=1)
+    sessions = {}
+    for compress in ("none", "int8"):
+        cc = ColaConfig(mode="faithful_offload", family="lowrank", taps="qv",
+                        rank=4, compress=compress)
+        sess = ColaSession(cfg, cc, params, key, optimizer=opt.sgd(0.1))
+        for t in range(4):
+            sess.step(data.batch_at(t))
+        sessions[compress] = sess
+    exact = np.concatenate([np.asarray(l).ravel() for l in
+                            jax.tree.leaves(sessions["none"].adapters)])
+    quant = np.concatenate([np.asarray(l).ravel() for l in
+                            jax.tree.leaves(sessions["int8"].adapters)])
+    assert np.corrcoef(exact, quant)[0, 1] > 0.995
+    denom = np.linalg.norm(exact)
+    assert denom > 0 and np.linalg.norm(exact - quant) / denom < 0.1

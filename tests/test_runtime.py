@@ -188,3 +188,29 @@ def test_serve_engine_multi_user_adapters_route_correctly():
         ml_eng.submit(r2)
         ml_eng.run_until_idle()
         assert r2.out == r.out, f"user {user}: multi-lora != merged"
+
+
+def test_watchdog_end_step_without_start_raises():
+    from repro.runtime.watchdog import WatchdogError
+    wd = Watchdog()
+    with pytest.raises(WatchdogError, match="without a matching start_step"):
+        wd.end_step(0)
+    # and the error is not an AssertionError (must survive python -O)
+    assert not issubclass(WatchdogError, AssertionError)
+
+
+def test_watchdog_heartbeat_survives_disk_errors(tmp_path):
+    """A missed heartbeat (full/read-only/vanished disk) is an observability
+    gap, not a training failure: end_step must still return and count the
+    failure in stats."""
+    good = Watchdog(heartbeat_path=str(tmp_path / "hb.json"))
+    good.start_step()
+    good.end_step(0)
+    assert good.stats == {"heartbeats": 1, "heartbeat_failures": 0}
+
+    bad = Watchdog(heartbeat_path=str(tmp_path / "no_such_dir" / "hb.json"))
+    for step in range(3):
+        bad.start_step()
+        dt = bad.end_step(step)
+        assert dt >= 0.0
+    assert bad.stats == {"heartbeats": 0, "heartbeat_failures": 3}

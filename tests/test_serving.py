@@ -267,3 +267,51 @@ def test_admit_batch_caps_admission():
 def test_bucket_rounds_up_to_power_of_two():
     assert _bucket(1) == 8 and _bucket(8) == 8 and _bucket(9) == 16
     assert _bucket(100) == 128 and _bucket(3, floor=1) == 4
+
+
+# ---------------------------------------------------------------------------
+# admission-time request validation
+# ---------------------------------------------------------------------------
+
+def test_submit_rejects_invalid_requests():
+    """Bad requests get a terminal rejected status without ever occupying a
+    slot or crashing a tick; valid ones are unaffected."""
+    cfg, params, key = _tiny()
+    eng = ServeEngine(cfg, params, slots=2, max_len=16,
+                      user_adapters=_banks(cfg, key))
+    bad = [
+        Request(rid=0, user=0, prompt=np.array([], np.int32), max_new=4),
+        Request(rid=1, user=0, prompt=np.arange(16) % cfg.vocab_size,
+                max_new=4),                                    # > max_len - 1
+        Request(rid=2, user=0, prompt=np.arange(4), max_new=0),
+        Request(rid=3, user=0, prompt=np.arange(4), max_new=-2),
+        Request(rid=4, user=7, prompt=np.arange(4), max_new=4),  # unknown user
+    ]
+    for r in bad:
+        eng.submit(r)
+    assert not eng.queue and all(r is None for r in eng.active)
+    assert eng.stats["rejected"] == len(bad)
+    assert len(eng.finished) == len(bad)
+    for r in bad:
+        assert r.done and r.status.startswith("rejected: ")
+        assert r.out == [] and r.latency is not None
+    assert "empty prompt" in bad[0].status
+    assert "prompt length" in bad[1].status
+    assert "max_new" in bad[2].status and "max_new" in bad[3].status
+    assert "unknown user" in bad[4].status
+
+    ok = Request(rid=5, user=1, prompt=np.arange(5) % cfg.vocab_size, max_new=3)
+    eng.submit(ok)
+    eng.run_until_idle()
+    assert ok.status == "done" and len(ok.out) == 3
+    assert eng.stats["completed"] == 1
+
+
+def test_submit_without_bank_accepts_any_user_id():
+    """With no adapter bank configured there is no user routing to validate."""
+    cfg, params, _ = _tiny()
+    eng = ServeEngine(cfg, params, slots=1, max_len=32)
+    r = Request(rid=0, user=99, prompt=np.arange(4) % cfg.vocab_size, max_new=2)
+    eng.submit(r)
+    eng.run_until_idle()
+    assert r.status == "done" and eng.stats["rejected"] == 0

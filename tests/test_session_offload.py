@@ -61,15 +61,51 @@ def test_merged_training_matches_unmerged():
                                        rtol=1e-3, atol=1e-5)
 
 
+def _is_qv(path) -> bool:
+    keys = [str(getattr(p, "key", p)) for p in path]
+    return "attn" in keys and any(k in ("q", "v") for k in keys)
+
+
 def test_linear_merged_matches_full_ft():
-    """Paper §C.3: ColA(Linear, merged) == training those weights directly."""
+    """Paper §C.3: ColA(Linear, merged) == full fine-tuning of exactly the
+    tapped weights. Ground truth: a masked full-FT run (SGD applied to the
+    attn q/v weights only, everything else frozen) on the same batches —
+    the loss trajectories and trained weight deltas must agree, and every
+    untapped weight must stay bit-identical. (The previous assertion
+    ``loss[-1] < loss[0]`` measured cross-batch noise, not correctness:
+    q/v-only training moves this tiny model's loss by less than the
+    batch-to-batch variance, so it failed spuriously.)"""
     cfg, params, data, key = _mk()
-    _, l_cola = _run(cfg, params, data, key, mode="faithful_offload",
-                     family="linear", taps="qv", merged=True)
+    sess, l_cola = _run(cfg, params, data, key, mode="faithful_offload",
+                        family="linear", taps="qv", merged=True)
     _, l_b = _run(cfg, params, data, key, mode="fused_fit", family="linear",
                   taps="qv")
     np.testing.assert_allclose(l_cola, l_b, rtol=1e-3, atol=1e-4)
-    assert l_cola[-1] < l_cola[0], "training must reduce loss"
+
+    # masked full-FT ground truth
+    from repro.core import gl
+    step_ft = jax.jit(lambda p, b: gl.train_step_ft(cfg, p, b)[:2])
+    p_ft, l_ft = params, []
+    for t in range(len(l_cola)):
+        loss, grads = step_ft(p_ft, data.batch_at(t))
+        l_ft.append(float(loss))
+        p_ft = jax.tree_util.tree_map_with_path(
+            lambda path, p, g: (p - 0.1 * g) if _is_qv(path) else p,
+            p_ft, grads)
+    np.testing.assert_allclose(l_cola, l_ft, rtol=0, atol=1e-5)
+
+    # merged inference weights == the FT-trained weights, and the deltas
+    # live only on the tapped q/v projections
+    merged = sess.inference_params()
+    for (path, m), (_, f), (_, p0) in zip(
+            jax.tree_util.tree_flatten_with_path(merged)[0],
+            jax.tree_util.tree_flatten_with_path(p_ft)[0],
+            jax.tree_util.tree_flatten_with_path(params)[0]):
+        if _is_qv(path):
+            np.testing.assert_allclose(np.asarray(m), np.asarray(f),
+                                       rtol=0, atol=1e-6)
+        else:
+            np.testing.assert_array_equal(np.asarray(m), np.asarray(p0))
 
 
 def test_interval_accumulation():
