@@ -1,0 +1,163 @@
+"""Per-PR performance trajectory: record / compare benchmark baselines.
+
+Each bench suite can save its measurements as a committed JSON baseline
+(``BENCH_kernels.json`` / ``BENCH_serve.json`` at the repo root) and later
+diff a fresh run against it. Entries are keyed by (op, shape); timings carry
+median and p90 wall time, throughputs carry tokens/sec. The comparator flags
+entries whose primary metric regressed beyond a relative threshold — wall
+times going up, throughputs going down.
+
+CPU wall time on shared CI runners is noisy, so the default threshold is
+generous (35%) and the CI job consuming this is non-blocking: the point is a
+visible per-PR trajectory, not a flaky gate.
+
+CLI (used by kernels_bench.py / serve_throughput.py):
+    --baseline   run and (over)write the committed baseline JSON
+    --check      run and diff against the committed baseline; exit 1 on
+                 regression (CI marks the job continue-on-error)
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Any, Callable
+
+import jax
+import numpy as np
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DEFAULT_THRESHOLD = 0.35
+
+# metric name -> direction: +1 means larger is better, -1 smaller is better
+METRIC_DIRECTION = {
+    "median_ms": -1,
+    "p90_ms": -1,
+    "tokens_per_s": +1,
+}
+
+# sub-millisecond ops are dominated by timer/dispatch noise on shared CPU
+# runners: a relative regression only counts if the absolute delta also
+# clears this floor (throughput metrics are macro-scale; no floor needed)
+MIN_ABS_DELTA = {"median_ms": 0.5, "p90_ms": 0.5}
+
+
+def timed_stats(fn: Callable, *args, iters: int = 20, warmup: int = 3) -> dict:
+    """Median/p90 wall time (ms) of ``fn(*args)`` over ``iters`` runs."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    samples = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        samples.append((time.perf_counter() - t0) * 1e3)
+    return {"median_ms": float(np.median(samples)),
+            "p90_ms": float(np.percentile(samples, 90))}
+
+
+def entry(op: str, shape: str, **metrics: float) -> dict:
+    """One baseline row. ``shape`` is a human-readable key ("S=512,H=8,D=64");
+    metrics are from METRIC_DIRECTION."""
+    unknown = set(metrics) - set(METRIC_DIRECTION)
+    assert not unknown, f"unknown metrics {unknown}"
+    return {"op": op, "shape": shape,
+            "metrics": {k: float(v) for k, v in metrics.items()}}
+
+
+def save(path: str, entries: list[dict], meta: dict | None = None) -> None:
+    doc = {"version": 1, "meta": meta or {}, "entries": entries}
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+        f.write("\n")
+
+
+def load(path: str) -> dict:
+    with open(path) as f:
+        return json.load(f)
+
+
+def _key(e: dict) -> tuple[str, str]:
+    return (e["op"], e["shape"])
+
+
+def compare(baseline: dict, entries: list[dict],
+            threshold: float = DEFAULT_THRESHOLD) -> dict:
+    """Diff fresh ``entries`` against a loaded ``baseline`` document.
+
+    Returns {"regressions": [...], "improvements": [...], "missing": [...],
+    "new": [...]}; a regression is a primary-direction change beyond
+    ``threshold`` relative to the baseline value.
+    """
+    base = {_key(e): e["metrics"] for e in baseline.get("entries", [])}
+    cur = {_key(e): e["metrics"] for e in entries}
+    regressions, improvements = [], []
+    for k in sorted(set(base) & set(cur)):
+        for metric, direction in METRIC_DIRECTION.items():
+            if metric not in base[k] or metric not in cur[k]:
+                continue
+            b, c = base[k][metric], cur[k][metric]
+            if b <= 0:
+                continue
+            rel = (c - b) / b
+            rec = {"op": k[0], "shape": k[1], "metric": metric,
+                   "baseline": b, "current": c, "rel_change": rel}
+            if abs(c - b) < MIN_ABS_DELTA.get(metric, 0.0):
+                continue
+            if direction * rel < -threshold:
+                regressions.append(rec)
+            elif direction * rel > threshold:
+                improvements.append(rec)
+    return {
+        "regressions": regressions,
+        "improvements": improvements,
+        "missing": sorted(set(base) - set(cur)),
+        "new": sorted(set(cur) - set(base)),
+    }
+
+
+def report_diff(diff: dict, report: Callable = print) -> None:
+    for r in diff["regressions"]:
+        report(f"REGRESSION {r['op']}[{r['shape']}] {r['metric']}: "
+               f"{r['baseline']:.3f} -> {r['current']:.3f} "
+               f"({r['rel_change']:+.0%})")
+    for r in diff["improvements"]:
+        report(f"improved  {r['op']}[{r['shape']}] {r['metric']}: "
+               f"{r['baseline']:.3f} -> {r['current']:.3f} "
+               f"({r['rel_change']:+.0%})")
+    for k in diff["missing"]:
+        report(f"missing   {k[0]}[{k[1]}] (in baseline, not measured)")
+    for k in diff["new"]:
+        report(f"new       {k[0]}[{k[1]}] (no baseline yet)")
+    if not diff["regressions"]:
+        report("no regressions vs committed baseline")
+
+
+def run_cli(argv, *, collect: Callable[[], list[dict]], baseline_name: str,
+            meta: dict | None = None, report: Callable = print) -> int:
+    """Shared --baseline / --check driver for bench suites. Returns an exit
+    code (1 only when --check finds regressions)."""
+    import argparse
+    p = argparse.ArgumentParser()
+    p.add_argument("--baseline", action="store_true",
+                   help=f"write {baseline_name} at the repo root")
+    p.add_argument("--check", action="store_true",
+                   help=f"diff a fresh run against {baseline_name}")
+    p.add_argument("--threshold", type=float, default=DEFAULT_THRESHOLD)
+    args = p.parse_args(argv)
+    path = os.path.join(REPO_ROOT, baseline_name)
+    entries = collect()
+    for e in entries:
+        ms = " ".join(f"{k}={v:.3f}" for k, v in e["metrics"].items())
+        report(f"{e['op']}[{e['shape']}] {ms}")
+    if args.baseline:
+        save(path, entries, meta=meta)
+        report(f"baseline written: {path}")
+        return 0
+    if args.check:
+        if not os.path.exists(path):
+            report(f"no committed baseline at {path}; run --baseline first")
+            return 0
+        diff = compare(load(path), entries, threshold=args.threshold)
+        report_diff(diff, report)
+        return 1 if diff["regressions"] else 0
+    return 0

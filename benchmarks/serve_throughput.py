@@ -7,6 +7,11 @@ prompt lengths, slot counts and user counts — the FTaaS serving hot path
     PYTHONPATH=src python benchmarks/serve_throughput.py
 or as part of the harness:
     PYTHONPATH=src:. python -m benchmarks.run --only serve_throughput
+
+Perf trajectory: ``--baseline`` writes ``BENCH_serve.json`` at the repo root
+(decode/prefill tokens/sec, burst on and off); ``--check`` diffs a fresh run
+against the committed baseline (non-blocking CI job; see
+benchmarks/perf_baseline.py).
 """
 from __future__ import annotations
 
@@ -49,7 +54,8 @@ def _run_once(eng, prompts, users, max_new):
     return float(np.mean(ttfts)), wall
 
 
-def bench(prompt_len=64, slots=4, n_users=2, n_requests=8, max_new=8, seed=0):
+def bench(prompt_len=64, slots=4, n_users=2, n_requests=8, max_new=8, seed=0,
+          **engine_kw):
     cfg = bench_cfg("smollm-135m")
     max_len = max(2 * prompt_len, prompt_len + max_new + 8)
     key = jax.random.PRNGKey(seed)
@@ -65,7 +71,7 @@ def bench(prompt_len=64, slots=4, n_users=2, n_requests=8, max_new=8, seed=0):
     out = {}
     for mode in ("batched", "reference"):
         eng = ServeEngine(cfg, params, slots=slots, max_len=max_len,
-                          user_adapters=banks, prefill_mode=mode)
+                          user_adapters=banks, prefill_mode=mode, **engine_kw)
         # warmup: compile decode + prefill for the shapes under test
         _run_once(eng, prompts[:slots], users[:slots], max_new)
         _reset(eng, cfg, slots, max_len)
@@ -99,5 +105,43 @@ def run(report):
         "batched prefill must beat single-row TTFT at prompt length >= 64"
 
 
+# ---------------------------------------------------------------------------
+# per-PR perf baseline (BENCH_serve.json)
+# ---------------------------------------------------------------------------
+
+def _engine_tokens_per_s(max_new=32, **kw):
+    """Decode tokens/sec of a warmed engine on a fixed request mix."""
+    res = bench(prompt_len=64, slots=4, n_users=2, n_requests=8,
+                max_new=max_new, **kw)["batched"]
+    return res["decode_tok_per_s"], res["prefill_tok_per_s"]
+
+
+def collect() -> list[dict]:
+    from benchmarks import perf_baseline as pb
+    entries = []
+    dec1, pre = _engine_tokens_per_s(decode_burst=1)
+    entries.append(pb.entry("serve_decode", "slots=4,users=2,burst=1",
+                            tokens_per_s=dec1))
+    dec8, _ = _engine_tokens_per_s(decode_burst=8)
+    entries.append(pb.entry("serve_decode", "slots=4,users=2,burst=8",
+                            tokens_per_s=dec8))
+    decq8, _ = _engine_tokens_per_s(decode_burst=8, bank_store="int8")
+    entries.append(pb.entry("serve_decode", "slots=4,users=2,burst=8,int8",
+                            tokens_per_s=decq8))
+    entries.append(pb.entry("serve_prefill", "slots=4,users=2,prompt=64",
+                            tokens_per_s=pre))
+    return entries
+
+
+def main(argv=None) -> int:
+    from benchmarks import perf_baseline as pb
+    import jax as _jax
+    return pb.run_cli(argv, collect=collect, baseline_name="BENCH_serve.json",
+                      meta={"suite": "serve_throughput",
+                            "device": _jax.devices()[0].platform})
+
+
 if __name__ == "__main__":
+    if len(sys.argv) > 1:
+        sys.exit(main())
     run(lambda *a: print(*a, flush=True))

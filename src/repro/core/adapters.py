@@ -56,11 +56,17 @@ def apply(family: str, w: Params, x: jax.Array) -> jax.Array:
     if family == "multi_lowrank":
         # FTaaS serving: per-request adapters in one batch (multi-LoRA).
         # w: {"A": (U, d_in, r), "B": (U, r, d_out), "idx": (B,)}; x: (B, S, d).
+        # int8-stored banks instead carry {"A_q", "A_scale", "B_q", "B_scale"}
+        # and dequantise on load (never a f32 copy of the bank).
         from repro.kernels import ops as kernel_ops
         Bz, S = x.shape[0], x.shape[1]
         flat = x.reshape(Bz * S, x.shape[-1])
         idx = jnp.repeat(w["idx"].astype(jnp.int32), S)
-        y = kernel_ops.multi_lora(flat, w["A"], w["B"], idx)
+        if "A_q" in w:
+            y = kernel_ops.multi_lora_q8(flat, w["A_q"], w["A_scale"],
+                                         w["B_q"], w["B_scale"], idx)
+        else:
+            y = kernel_ops.multi_lora(flat, w["A"], w["B"], idx)
         return y.reshape(Bz, S, -1)
     raise ValueError(f"unknown adapter family: {family!r}")
 

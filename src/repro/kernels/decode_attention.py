@@ -1,0 +1,144 @@
+"""Fused single-query flash-attention decode kernel (Pallas, TPU target).
+
+The serving decode hot path: every live slot attends one new query against its
+KV cache row. The kernel streams the cache in (block_k x d_head) VMEM tiles
+with the online-softmax running stats in scratch — the decode analogue of the
+prefill flash kernel — with three decode-specific twists:
+
+- **GQA layout**: the G query heads of one KV group form the *rows* of the q
+  tile ((G, Dh) per grid step), so each KV tile is read once per group and the
+  (G, block_k) score tile is real MXU work even though Sq == 1.
+- **Per-slot positions via scalar prefetch**: each row's current position (and
+  its ``live`` bit) arrives in SMEM before the grid runs; KV blocks entirely
+  above the position (or entirely below the local-window floor) are skipped
+  with ``pl.when`` — continuous batching means rows at wildly different
+  positions share one launch.
+- **Live-slot semantics**: dead/padding slots produce exact zeros (not
+  attention over a stale cache), matching ``ref.sdpa_decode``.
+
+Oracle: ``repro.kernels.ref.sdpa_decode``. Tests sweep GQA group counts,
+window/softcap variants and live-mask patterns in interpret mode.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+NEG_INF = -1e30
+
+
+def supported(q, k_cache, v_cache) -> bool:
+    B, Sq, H, Dh = q.shape
+    _, Sk, K, _ = k_cache.shape
+    if Sq != 1 or Dh not in (64, 128, 256):
+        return False
+    if H % K != 0:
+        return False
+    return Sk % _block_k(Sk) == 0
+
+
+def _block_k(sk: int) -> int:
+    for b in (512, 256, 128, 64, 32, 16, 8):
+        if sk % b == 0 and b <= sk:
+            return b
+    return sk
+
+
+def _kernel(pos_ref, live_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref,
+            l_ref, *, scale, window, softcap, block_k, n_groups):
+    bi = pl.program_id(0)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    pos = pos_ref[bi]
+    start = ki * block_k
+    # block intersects the valid kv range [max(0, pos - window + 1), pos]?
+    in_range = start <= pos
+    if window is not None and window > 0:
+        in_range = in_range & (start + block_k > pos - window + 1)
+
+    @pl.when(in_range)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)            # (G, Dh)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)      # (Bk, Dh)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale
+        if softcap is not None and softcap > 0:
+            s = jnp.tanh(s / softcap) * softcap
+        kpos = start + jax.lax.broadcasted_iota(
+            jnp.int32, (n_groups, block_k), 1)
+        mask = kpos <= pos
+        if window is not None and window > 0:
+            mask = mask & (kpos > pos - window)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        p = jnp.where(mask, p, 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())))
+        m_ref[...] = m_new
+
+    @pl.when(ki == pl.num_programs(2) - 1)
+    def _final():
+        l = l_ref[...]
+        safe_l = jnp.where(l > 0, l, 1.0)
+        out = acc_ref[...] / safe_l[:, None]
+        out = out * (live_ref[bi] > 0).astype(jnp.float32)
+        o_ref[0, 0] = out.astype(o_ref.dtype)
+
+
+def decode_attention(q: Array, k_cache: Array, v_cache: Array,
+                     positions: Array, *, live: Array | None = None,
+                     window: int | None = None, softcap: float | None = None,
+                     scale: float | None = None,
+                     interpret: bool = False) -> Array:
+    """q: (B, 1, H, Dh); caches: (B, Smax, K, Dh); positions: (B,) int32;
+    live: (B,) bool or None (all live). Returns (B, 1, H, Dh)."""
+    B, Sq, H, Dh = q.shape
+    _, Sk, K, _ = k_cache.shape
+    G = H // K
+    if scale is None:
+        scale = Dh ** -0.5
+    bk = _block_k(Sk)
+    if live is None:
+        live = jnp.ones((B,), bool)
+    qg = q.reshape(B, K, G, Dh)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, K, Sk // bk),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, Dh), lambda b, h, ki, pos, live: (b, h, 0, 0)),
+            pl.BlockSpec((1, bk, 1, Dh), lambda b, h, ki, pos, live: (b, ki, h, 0)),
+            pl.BlockSpec((1, bk, 1, Dh), lambda b, h, ki, pos, live: (b, ki, h, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, G, Dh), lambda b, h, ki, pos, live: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, Dh), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+        ],
+    )
+    o = pl.pallas_call(
+        functools.partial(_kernel, scale=scale, window=window, softcap=softcap,
+                          block_k=bk, n_groups=G),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, K, G, Dh), q.dtype),
+        interpret=interpret,
+    )(positions.astype(jnp.int32), live.astype(jnp.int32), qg, k_cache, v_cache)
+    return o.reshape(B, 1, H, Dh)

@@ -54,6 +54,23 @@ def sdpa(q: Array, k: Array, v: Array, *, q_positions: Array, kv_positions: Arra
                     causal=causal, window=window, softcap=softcap, scale=scale)
 
 
+def sdpa_decode(q: Array, k_cache: Array, v_cache: Array, positions: Array, *,
+                live: Array | None = None, window: int | None = None,
+                softcap: float | None = None, scale: float | None = None) -> Array:
+    """Single-query decode attention against a slot KV cache (serving hot
+    path): per-row positions, per-slot live mask. Routes to the fused
+    flash-decode kernel off-CPU; see ref.sdpa_decode for semantics."""
+    if _BACKEND != "ref":
+        from repro.kernels import decode_attention as da
+        if da.supported(q, k_cache, v_cache):
+            return da.decode_attention(q, k_cache, v_cache, positions,
+                                       live=live, window=window,
+                                       softcap=softcap, scale=scale,
+                                       interpret=_interpret())
+    return ref.sdpa_decode(q, k_cache, v_cache, positions, live=live,
+                           window=window, softcap=softcap, scale=scale)
+
+
 # ---------------------------------------------------------------------------
 # cola_fit
 # ---------------------------------------------------------------------------
@@ -75,17 +92,40 @@ def cola_fit_lowrank(x: Array, grad_h: Array, A: Array, B: Array,
 def multi_lora(x: Array, A: Array, B: Array, idx: Array, scale: float = 1.0) -> Array:
     if _BACKEND != "ref":
         from repro.kernels import multi_lora as ml
-        if ml.supported(x, A, B, idx):
-            return ml.multi_lora(x, A, B, idx, scale=scale, interpret=_interpret())
+        # decode-shaped dispatch (BGMV idiom): when the bank is larger than
+        # the token batch, compact to the resident adapter set first so the
+        # kernel's user grid scales with min(U, T) instead of U.
+        grouped = A.shape[0] > x.shape[0]
+        fn = ml.multi_lora_grouped if grouped else ml.multi_lora
+        if ml.supported(x, A, B, idx, grouped=grouped):
+            return fn(x, A, B, idx, scale=scale, interpret=_interpret())
         # prefill-shaped dispatch: a (J, P) prompt batch flattens to J*P tokens,
         # which rarely aligns with the kernel's token blocking. Pad with
         # no-user rows (idx == -1 contributes zeros) and slice back.
         padded = ml.pad_tokens(x, idx)
-        if padded is not None and ml.supported(padded[0], A, B, padded[1]):
-            y = ml.multi_lora(padded[0], A, B, padded[1], scale=scale,
-                              interpret=_interpret())
+        if padded is not None and ml.supported(padded[0], A, B, padded[1],
+                                               grouped=grouped):
+            y = fn(padded[0], A, B, padded[1], scale=scale,
+                   interpret=_interpret())
             return y[:x.shape[0]]
     return ref.multi_lora(x, A, B, idx, scale=scale)
+
+
+def multi_lora_q8(x: Array, A_q: Array, A_scale: Array, B_q: Array,
+                  B_scale: Array, idx: Array, scale: float = 1.0) -> Array:
+    """int8-stored bank apply with fused dequant-on-load (see ref.multi_lora_q8
+    for the oracle semantics; the serve path never materialises a f32 bank)."""
+    if _BACKEND != "ref":
+        from repro.kernels import multi_lora as ml
+        if ml.supported(x, A_q, B_q, idx):
+            return ml.multi_lora_q8(x, A_q, A_scale, B_q, B_scale, idx,
+                                    scale=scale, interpret=_interpret())
+        padded = ml.pad_tokens(x, idx)
+        if padded is not None and ml.supported(padded[0], A_q, B_q, padded[1]):
+            y = ml.multi_lora_q8(padded[0], A_q, A_scale, B_q, B_scale,
+                                 padded[1], scale=scale, interpret=_interpret())
+            return y[:x.shape[0]]
+    return ref.multi_lora_q8(x, A_q, A_scale, B_q, B_scale, idx, scale=scale)
 
 
 # ---------------------------------------------------------------------------

@@ -104,6 +104,26 @@ def _sdpa_dense(q: Array, k: Array, v: Array, *, q_positions: Array,
     return o.astype(q.dtype)
 
 
+def sdpa_decode(q: Array, k_cache: Array, v_cache: Array, positions: Array, *,
+                live: Array | None = None, window: int | None = None,
+                softcap: float | None = None, scale: float | None = None) -> Array:
+    """Single-query decode attention against a slot KV cache (fused-kernel
+    oracle). q: (B, 1, H, Dh); caches: (B, Smax, K, Dh); positions: (B,) each
+    row's current position (cache valid at kv_pos <= position). ``live``: (B,)
+    bool — non-live (dead/padding) slots return zeros, so their output is
+    deterministic rather than garbage attention over a stale cache.
+    """
+    B, Smax = k_cache.shape[0], k_cache.shape[1]
+    kv_pos = jnp.broadcast_to(jnp.arange(Smax, dtype=jnp.int32)[None],
+                              (B, Smax))
+    o = sdpa(q, k_cache, v_cache, q_positions=positions[:, None],
+             kv_positions=kv_pos, causal=True, window=window, softcap=softcap,
+             scale=scale)
+    if live is not None:
+        o = jnp.where(live[:, None, None, None], o, 0.0).astype(o.dtype)
+    return o
+
+
 # ---------------------------------------------------------------------------
 # cola_fit oracle: fused low-rank adapter fit gradient (the offloaded GL step)
 # ---------------------------------------------------------------------------
@@ -137,17 +157,56 @@ def multi_lora(x: Array, A: Array, B: Array, idx: Array,
     """y[t] = scale * (x[t] @ A[idx[t]]) @ B[idx[t]].
 
     x: (T, d_in); A: (U, d_in, r); B: (U, r, d_out); idx: (T,) int32 in [0, U).
+    Rows with idx < 0 are padding and contribute exactly zero (the kernel's
+    user mask never matches them; the oracle must agree).
     """
-    a = A[idx].astype(jnp.float32)                # (T, d_in, r)
-    b = B[idx].astype(jnp.float32)                # (T, r, d_out)
+    safe = jnp.clip(idx, 0, A.shape[0] - 1)
+    a = A[safe].astype(jnp.float32)               # (T, d_in, r)
+    b = B[safe].astype(jnp.float32)               # (T, r, d_out)
     xa = jnp.einsum("td,tdr->tr", x.astype(jnp.float32), a)
     y = jnp.einsum("tr,tro->to", xa, b)
+    y = jnp.where((idx >= 0)[:, None], y, 0.0)
+    return (scale * y).astype(x.dtype)
+
+
+def multi_lora_q8(x: Array, A_q: Array, A_scale: Array, B_q: Array,
+                  B_scale: Array, idx: Array, scale: float = 1.0) -> Array:
+    """int8-stored multi-LoRA oracle. A_q: (U, d_in, r) int8 with per-row
+    scales A_scale: (U, d_in, 1); likewise B. Dequantises only the T gathered
+    per-token adapters — never a f32 copy of the full U-entry bank. Rows with
+    idx < 0 are padding and contribute exactly zero."""
+    safe = jnp.clip(idx, 0, A_q.shape[0] - 1)
+    a = A_q[safe].astype(jnp.float32) * A_scale[safe].astype(jnp.float32)
+    b = B_q[safe].astype(jnp.float32) * B_scale[safe].astype(jnp.float32)
+    xa = jnp.einsum("td,tdr->tr", x.astype(jnp.float32), a)
+    y = jnp.einsum("tr,tro->to", xa, b)
+    y = jnp.where((idx >= 0)[:, None], y, 0.0)
     return (scale * y).astype(x.dtype)
 
 
 # ---------------------------------------------------------------------------
 # ssd oracle: mamba2 state-space duality (quadratic within-chunk form)
 # ---------------------------------------------------------------------------
+
+def _segsum(log_decay: Array) -> Array:
+    """Stable segment sum: seg[i, j] = sum_{k=j+1..i} log_decay_k (j <= i).
+
+    The naive form ``cum_i - cum_j`` differences two global-cumsum anchors; at
+    long S the anchors grow to O(S) magnitude while the segment sum stays O(1)
+    for nearby (i, j), so float32 cancellation corrupts exactly the decay
+    entries that matter (the seed ``ssd_chunked[512-128]`` failure). Instead,
+    accumulate each column j directly from position j+1 (the Mamba2 repo's
+    "more stable segment sum"): mask log_decay to the strict lower triangle and
+    cumsum along i — every segment sum is then built only from its own terms.
+
+    log_decay: (b, S, H) -> (b, S, S, H) with axis 1 = i, axis 2 = j.
+    """
+    S = log_decay.shape[1]
+    strict = jnp.tril(jnp.ones((S, S), bool), -1)              # i > j
+    terms = jnp.where(strict[None, :, :, None],
+                      log_decay[:, :, None, :], 0.0)           # (b,i,j,H)
+    return jnp.cumsum(terms, axis=1)
+
 
 def ssd(x: Array, dt: Array, a: Array, B: Array, C: Array, D: Array,
         init_state: Array | None = None) -> tuple[Array, Array]:
@@ -172,10 +231,11 @@ def ssd(x: Array, dt: Array, a: Array, B: Array, C: Array, D: Array,
 
     log_decay = dtf * af[None, None, :]                   # (b,S,H)  (negative)
     cum = jnp.cumsum(log_decay, axis=1)                   # (b,S,H)
-    # L[i,j] = exp(cum_i - cum_j) for j <= i else 0
-    Lmat = jnp.exp(cum[:, :, None, :] - cum[:, None, :, :])   # (b,Sq,Sk,H)
+    # L[i,j] = exp(sum_{k=j+1..i} log_decay_k) for j <= i else 0, via the
+    # stable segment sum (see _segsum for why not exp(cum_i - cum_j)).
+    seg = _segsum(log_decay)                              # (b,Sq,Sk,H)
     causal = jnp.tril(jnp.ones((S, S), bool))
-    Lmat = jnp.where(causal[None, :, :, None], Lmat, 0.0)
+    Lmat = jnp.where(causal[None, :, :, None], jnp.exp(seg), 0.0)
     # scores[i,j] = C_i . B_j
     cb = jnp.einsum("bin,bjn->bij", Cf, Bf)               # (b,S,S)
     w = cb[:, :, :, None] * Lmat                          # (b,Sq,Sk,H)
@@ -186,9 +246,10 @@ def ssd(x: Array, dt: Array, a: Array, B: Array, C: Array, D: Array,
         decay_from_start = jnp.exp(cum)                   # (b,S,H)
         y = y + jnp.einsum("bin,bhpn,bih->bihp", Cf, sf, decay_from_start)
 
-    # final state: sum_j exp(cum_S - cum_j) dt_j B_j x_j (+ carried init state)
+    # final state: sum_j exp(sum_{k=j+1..S} log_decay_k) dt_j B_j x_j
+    # (+ carried init state); the decay-to-end row is seg[S-1, :].
     total = cum[:, -1, :]                                 # (b,H)
-    decay_to_end = jnp.exp(total[:, None, :] - cum)       # (b,S,H)
+    decay_to_end = jnp.exp(seg[:, -1, :, :])              # (b,S,H)
     state = jnp.einsum("bjh,bjh,bjhp,bjn->bhpn", decay_to_end, dtf, xf, Bf)
     if init_state is not None:
         state = state + init_state.astype(jnp.float32) * jnp.exp(total)[:, :, None, None]

@@ -90,11 +90,13 @@ def attention_decode(params: dict, x: Array, k_cache: Array, v_cache: Array,
                      rope_theta: float = 1e4, window: int | None = None,
                      softcap: float | None = None, qk_norm: bool = False,
                      tap_prefix: str = "attn", tap_ctx: tuple | None = None,
-                     ) -> tuple[Array, Array, Array]:
+                     live: Array | None = None) -> tuple[Array, Array, Array]:
     """One-token decode step.
 
     x: (B, 1, d_model); k_cache/v_cache: (B, Smax, K, Dh); positions: (B,) current
     write positions (number of tokens already in the cache for each row).
+    ``live``: optional (B,) slot mask — dead rows' attention output is zeroed
+    (their cache writes are reverted by the caller; see model._mask_cache_rows).
     Returns (y, new_k_cache, new_v_cache).
     """
     B, S1, _ = x.shape
@@ -103,20 +105,14 @@ def attention_decode(params: dict, x: Array, k_cache: Array, v_cache: Array,
                            n_kv=n_kv, d_head=d_head, rope_theta=rope_theta,
                            qk_norm=qk_norm, tap_prefix=tap_prefix, tap_ctx=tap_ctx)
 
-    # Scatter the new k/v into the cache at per-row positions.
-    def write(cache, new):   # cache: (Smax, K, Dh), new: (1, K, Dh)
-        return jax.lax.dynamic_update_slice_in_dim(cache, new, 0, axis=0)
-
-    # roll positions into slice index via vmap over batch
+    # Scatter the new k/v into the cache at per-row positions (vmap over batch).
     k_cache = jax.vmap(lambda c, n, p: jax.lax.dynamic_update_slice_in_dim(
         c, n, p, axis=0))(k_cache, k, positions)
     v_cache = jax.vmap(lambda c, n, p: jax.lax.dynamic_update_slice_in_dim(
         c, n, p, axis=0))(v_cache, v, positions)
 
-    kv_pos = jnp.arange(k_cache.shape[1], dtype=jnp.int32)[None, :]  # (1, Smax)
-    o = kernel_ops.sdpa(q, k_cache, v_cache, q_positions=positions[:, None],
-                        kv_positions=jnp.broadcast_to(kv_pos, (B, k_cache.shape[1])),
-                        causal=True, window=window, softcap=softcap)
+    o = kernel_ops.sdpa_decode(q, k_cache, v_cache, positions, live=live,
+                               window=window, softcap=softcap)
     o = o.reshape(B, 1, n_heads * d_head)
     y = L.dense(params["o"], o, tap=f"{tap_prefix}.o", tap_ctx=tap_ctx)
     return y, k_cache, v_cache

@@ -116,14 +116,15 @@ def ssm_block(cfg: ModelConfig, params: dict, x: Array, *, tap_prefix: str,
 
 def attn_block_decode(cfg: ModelConfig, params: dict, x: Array, k_cache: Array,
                       v_cache: Array, positions: Array, *, window: int | None,
-                      tap_prefix: str, tap_ctx: tuple | None):
+                      tap_prefix: str, tap_ctx: tuple | None,
+                      live: Array | None = None):
     h = _norm(cfg, params["ln1"], x)
     h, k_cache, v_cache = A.attention_decode(
         params["attn"], h, k_cache, v_cache, positions,
         n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, d_head=cfg.d_head,
         rope_theta=cfg.rope_theta, window=window,
         softcap=cfg.attn_softcap or None, qk_norm=cfg.qk_norm,
-        tap_prefix=f"{tap_prefix}.attn", tap_ctx=tap_ctx)
+        tap_prefix=f"{tap_prefix}.attn", tap_ctx=tap_ctx, live=live)
     if cfg.post_norm:
         h = _norm(cfg, params["post_ln1"], h)
     x = x + h

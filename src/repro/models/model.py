@@ -519,7 +519,7 @@ def _decode_scan(cfg, stack_params, x, cache, positions, spec, adapters, deltas,
         if kind == "attn":
             x, k, v = B.attn_block_decode(cfg, lp, x, c["k"], c["v"], positions,
                                           window=window, tap_prefix=prefix,
-                                          tap_ctx=tap_ctx)
+                                          tap_ctx=tap_ctx, live=live)
             return x, _mask_cache_rows(live, {"k": k, "v": v}, c)
         x, conv, st = B.ssm_block_decode(cfg, lp, x, c["conv"], c["ssm"],
                                          tap_prefix=prefix, tap_ctx=tap_ctx)
@@ -557,10 +557,10 @@ def decode_step(cfg: ModelConfig, params: dict, batch: dict, cache: dict,
             x, ka, va = B.attn_block_decode(
                 cfg, lpa, x, ca["k"], ca["v"], positions,
                 window=cfg.local_window, tap_prefix="layers_a",
-                tap_ctx=(spec, ada, dea, aux))
+                tap_ctx=(spec, ada, dea, aux), live=live)
             x, kb, vb = B.attn_block_decode(
                 cfg, lpb, x, cb["k"], cb["v"], positions, window=None,
-                tap_prefix="layers_b", tap_ctx=(spec, adb, deb, aux))
+                tap_prefix="layers_b", tap_ctx=(spec, adb, deb, aux), live=live)
             return x, (_mask_cache_rows(live, {"k": ka, "v": va}, ca),
                        _mask_cache_rows(live, {"k": kb, "v": vb}, cb))
 
@@ -583,7 +583,8 @@ def decode_step(cfg: ModelConfig, params: dict, batch: dict, cache: dict,
             x, k, v = B.attn_block_decode(
                 cfg, params["shared"], x, cache["shared"]["k"][i],
                 cache["shared"]["v"][i], positions, window=None,
-                tap_prefix="shared", tap_ctx=(spec, sh_ad, sh_de, aux))
+                tap_prefix="shared", tap_ctx=(spec, sh_ad, sh_de, aux),
+                live=live)
             masked = _mask_cache_rows(
                 live, {"k": k, "v": v},
                 {"k": cache["shared"]["k"][i], "v": cache["shared"]["v"][i]})

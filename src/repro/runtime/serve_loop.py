@@ -86,6 +86,23 @@ def stack_user_adapters(adapter_list: list[dict]) -> dict:
     return out
 
 
+def quantize_bank(bank: dict) -> dict:
+    """f32 multi-user bank -> int8-stored bank: every leaf ``name`` becomes
+    ``name_q`` (int8) + ``name_scale`` (per-row f32). The serve path then
+    dequantises on kernel tile load (kernels/multi_lora.multi_lora_q8) instead
+    of ever holding a f32 copy of the bank — 4x less adapter HBM per user."""
+    from repro.kernels import multi_lora as ml
+    out: dict[str, Any] = {}
+    for tap, leaves in bank.items():
+        entry = {}
+        for name, leaf in leaves.items():
+            q, s = ml.quant_rows(leaf)
+            entry[f"{name}_q"] = q
+            entry[f"{name}_scale"] = s
+        out[tap] = entry
+    return out
+
+
 def publish_banks(engine: "ServeEngine", channels) -> int:
     """Install every `OffloadChannel`'s bank that carries a validated version
     bump into the serving engine (the train -> serve hot-swap path). Channels
@@ -114,14 +131,22 @@ class ServeEngine:
     def __init__(self, cfg: ModelConfig, params: dict, *, slots: int = 8,
                  max_len: int = 512, user_adapters: list[dict] | None = None,
                  taps: str = "qv", scale: float = 1.0,
-                 prefill_mode: str = "batched", admit_batch: int | None = None):
+                 prefill_mode: str = "batched", admit_batch: int | None = None,
+                 bank_store: str = "f32", decode_burst: int = 1):
         assert prefill_mode in ("batched", "reference"), prefill_mode
+        assert bank_store in ("f32", "int8"), bank_store
         self.cfg = cfg
         self.params = params
         self.slots = slots
         self.max_len = max_len
         self.prefill_mode = prefill_mode
         self.admit_batch = admit_batch if admit_batch is not None else slots
+        self.bank_store = bank_store
+        # Burst decoding: fuse up to ``decode_burst`` decode ticks into one
+        # jitted lax.scan, amortising per-dispatch overhead. Bursts only run
+        # when no live slot could complete mid-burst, so emitted tokens are
+        # bit-identical to decode_burst=1 (guarded by tests/test_serving.py).
+        self.decode_burst = max(1, int(decode_burst))
         self.queue: list[Request] = []
         self.finished: list[Request] = []
         self.active: list[Request | None] = [None] * slots
@@ -137,10 +162,13 @@ class ServeEngine:
             self.spec = taps_lib.make_spec(family="multi_lowrank",
                                            taps=tap_names, scale=scale)
             self.bank = stack_user_adapters(user_adapters)
+            if bank_store == "int8":
+                self.bank = quantize_bank(self.bank)
             self.n_users = len(user_adapters)
             self.bank_versions = np.zeros(self.n_users, np.int64)
         self._recurrent = model_lib.has_recurrent_state(cfg)
         self._decode = jax.jit(self._decode_fn)
+        self._decode_n = jax.jit(self._decode_burst_fn, static_argnames=("n",))
         self._prefill = jax.jit(self._prefill_fn)
         self.stats = {"ticks": 0, "tokens": 0, "completed": 0, "admitted": 0,
                       "prefill_calls": 0, "prefill_tokens": 0,
@@ -158,7 +186,7 @@ class ServeEngine:
         vars_ = {}
         for tap, leaves in bank.items():
             entry = dict(leaves)
-            a = leaves["A"]
+            a = leaves.get("A", leaves.get("A_q"))   # int8 banks carry A_q
             if a.ndim == 4:   # stacked (L, U, d, r): idx must carry the layer
                 entry["idx"] = jnp.broadcast_to(users, (a.shape[0],) + users.shape)
             else:
@@ -173,6 +201,27 @@ class ServeEngine:
             self._cola_vars(bank, users), live=live)
         next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
         return next_tok, cache
+
+    def _decode_burst_fn(self, params, bank, cache, tokens, positions, users,
+                         live, *, n: int):
+        """``n`` chained decode ticks in one jitted lax.scan: each step feeds
+        its argmax token back as the next step's input and advances live rows'
+        positions. Returns the (n, slots) token trace plus the final cache.
+        Dead rows keep their input token and position, matching what the
+        host-side loop would have passed on every individual tick."""
+        def body(carry, _):
+            toks, pos, cache = carry
+            batch = {"tokens": toks, "positions": pos}
+            logits, cache = model_lib.decode_step(
+                self.cfg, params, batch, cache, self.spec,
+                self._cola_vars(bank, users), live=live)
+            nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+            toks = jnp.where(live, nxt, toks[:, 0])[:, None]
+            pos = pos + live.astype(pos.dtype)
+            return (toks, pos, cache), nxt
+        (_, _, cache), trace = jax.lax.scan(
+            body, (tokens, positions, cache), None, length=n)
+        return trace, cache
 
     def _prefill_fn(self, params, bank, cache, tokens, users, slot_ids):
         """Run a padded (J, P) prompt batch through full-sequence prefill and
@@ -237,8 +286,21 @@ class ServeEngine:
         for tap, entry in self.bank.items():
             new_entry = dict(entry)
             for name, leaf in adapters[tap].items():
-                stacked = self.bank[tap][name]
                 user_slot = ((slice(None), user) if leaf.ndim > 2 else user)
+                if f"{name}_q" in entry:
+                    # int8-stored bank: quantise the incoming f32 leaf and
+                    # swap in both the codes and the per-row scales.
+                    from repro.kernels import multi_lora as ml
+                    q, s = ml.quant_rows(jnp.asarray(leaf, jnp.float32))
+                    stacked_q = entry[f"{name}_q"]
+                    if q.shape != stacked_q[user_slot].shape:
+                        self.stats["bank_rejected"] += 1
+                        return False
+                    new_entry[f"{name}_q"] = stacked_q.at[user_slot].set(q)
+                    new_entry[f"{name}_scale"] = (
+                        entry[f"{name}_scale"].at[user_slot].set(s))
+                    continue
+                stacked = entry[name]
                 if leaf.shape != stacked[user_slot].shape:
                     self.stats["bank_rejected"] += 1
                     return False
@@ -333,8 +395,30 @@ class ServeEngine:
                                      jnp.asarray(toks), jnp.asarray(positions),
                                      jnp.asarray(self.users), jnp.asarray(live))
 
+    def _burst_len(self, live_idx: list[int]) -> int:
+        """Largest safe burst: no live slot may complete (or first-token) inside
+        a burst, so the host loop only ever observes burst boundaries. Burst
+        sizes are powers of two to bound jit recompilations to log2 variants."""
+        if self.decode_burst <= 1:
+            return 1
+        bound = self.decode_burst
+        for i in live_idx:
+            req = self.active[i]
+            if not req.out:
+                return 1   # first output token: emit promptly (TTFT)
+            remaining = min(req.max_new - len(req.out),
+                            self.max_len - 1 - int(self.positions[i]))
+            bound = min(bound, remaining)
+        if bound <= 1:
+            return 1
+        n = 1
+        while n * 2 <= bound:
+            n *= 2
+        return n
+
     def tick(self) -> int:
-        """One engine iteration: admit + decode one token for all live slots."""
+        """One engine iteration: admit + decode one token for all live slots
+        (or a burst of tokens when ``decode_burst`` allows; see _burst_len)."""
         self._admit()
         live_idx = [i for i, r in enumerate(self.active) if r is not None]
         if not live_idx:
@@ -344,23 +428,35 @@ class ServeEngine:
         for i in live_idx:
             toks[i, 0] = self.active[i]._last
             live[i] = True
+        n = self._burst_len(live_idx)
         t0 = time.perf_counter()
-        nxt, self.cache = self._decode(self.params, self.bank, self.cache,
-                                       jnp.asarray(toks),
-                                       jnp.asarray(self.positions),
-                                       jnp.asarray(self.users),
-                                       jnp.asarray(live))
-        nxt = np.asarray(nxt)
+        if n <= 1:
+            nxt, self.cache = self._decode(self.params, self.bank, self.cache,
+                                           jnp.asarray(toks),
+                                           jnp.asarray(self.positions),
+                                           jnp.asarray(self.users),
+                                           jnp.asarray(live))
+            trace = np.asarray(nxt)[None]                      # (1, slots)
+        else:
+            trace, self.cache = self._decode_n(self.params, self.bank,
+                                               self.cache, jnp.asarray(toks),
+                                               jnp.asarray(self.positions),
+                                               jnp.asarray(self.users),
+                                               jnp.asarray(live), n=n)
+            trace = np.asarray(trace)                          # (n, slots)
         now = time.perf_counter()
         self.stats["decode_time"] += now - t0
+        for step in range(trace.shape[0]):
+            for i in live_idx:
+                req = self.active[i]
+                tok = int(trace[step, i])
+                if not req.out:
+                    req.t_first = now
+                req.out.append(tok)
+                req._last = tok
+                self.positions[i] += 1
         for i in live_idx:
             req = self.active[i]
-            tok = int(nxt[i])
-            if not req.out:
-                req.t_first = now
-            req.out.append(tok)
-            req._last = tok
-            self.positions[i] += 1
             if len(req.out) >= req.max_new or self.positions[i] >= self.max_len - 1:
                 req.done = True
                 req.status = "done"
@@ -369,9 +465,9 @@ class ServeEngine:
                 self.finished.append(req)
                 self.active[i] = None
                 self.positions[i] = 0
-        self.stats["ticks"] += 1
-        self.stats["tokens"] += len(live_idx)
-        return len(live_idx)
+        self.stats["ticks"] += trace.shape[0]
+        self.stats["tokens"] += trace.shape[0] * len(live_idx)
+        return trace.shape[0] * len(live_idx)
 
     def run_until_idle(self, max_ticks: int = 10_000) -> None:
         for _ in range(max_ticks):

@@ -1,0 +1,95 @@
+"""Perf-baseline trajectory: save/load roundtrip, comparator direction and
+noise-floor semantics, and schema sanity of the committed BENCH_*.json files."""
+import json
+import os
+import sys
+
+import pytest
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, REPO_ROOT)
+
+from benchmarks import perf_baseline as pb  # noqa: E402
+
+
+def _doc(entries):
+    return {"version": 1, "meta": {}, "entries": entries}
+
+
+def test_save_load_roundtrip(tmp_path):
+    entries = [pb.entry("op_a", "S=64", median_ms=1.5, p90_ms=2.0),
+               pb.entry("op_b", "slots=4", tokens_per_s=1234.5)]
+    path = str(tmp_path / "bench.json")
+    pb.save(path, entries, meta={"suite": "unit"})
+    doc = pb.load(path)
+    assert doc["version"] == 1 and doc["meta"] == {"suite": "unit"}
+    assert doc["entries"] == entries
+
+
+def test_entry_rejects_unknown_metric():
+    with pytest.raises(AssertionError):
+        pb.entry("op", "shape", bogus_metric=1.0)
+
+
+def test_compare_flags_walltime_regression_and_throughput_drop():
+    base = _doc([pb.entry("k", "s", median_ms=10.0, p90_ms=12.0),
+                 pb.entry("serve", "s", tokens_per_s=1000.0)])
+    cur = [pb.entry("k", "s", median_ms=20.0, p90_ms=12.5),
+           pb.entry("serve", "s", tokens_per_s=400.0)]
+    diff = pb.compare(base, cur, threshold=0.35)
+    flagged = {(r["op"], r["metric"]) for r in diff["regressions"]}
+    assert flagged == {("k", "median_ms"), ("serve", "tokens_per_s")}
+    assert not diff["improvements"] and not diff["missing"] and not diff["new"]
+
+
+def test_compare_flags_improvements_not_regressions():
+    base = _doc([pb.entry("k", "s", median_ms=10.0),
+                 pb.entry("serve", "s", tokens_per_s=1000.0)])
+    cur = [pb.entry("k", "s", median_ms=4.0),
+           pb.entry("serve", "s", tokens_per_s=2000.0)]
+    diff = pb.compare(base, cur, threshold=0.35)
+    assert not diff["regressions"] and len(diff["improvements"]) == 2
+
+
+def test_compare_ignores_subfloor_walltime_noise():
+    """A 100% relative change on a 50us op is timer noise, not a regression
+    (the absolute delta floor); the same relative change above the floor is."""
+    base = _doc([pb.entry("tiny", "s", median_ms=0.05)])
+    diff = pb.compare(base, [pb.entry("tiny", "s", median_ms=0.10)],
+                      threshold=0.35)
+    assert not diff["regressions"]
+    base = _doc([pb.entry("big", "s", median_ms=5.0)])
+    diff = pb.compare(base, [pb.entry("big", "s", median_ms=10.0)],
+                      threshold=0.35)
+    assert len(diff["regressions"]) == 1
+
+
+def test_compare_reports_missing_and_new_entries():
+    base = _doc([pb.entry("gone", "s", median_ms=1.0)])
+    diff = pb.compare(base, [pb.entry("fresh", "s", median_ms=1.0)])
+    assert diff["missing"] == [("gone", "s")]
+    assert diff["new"] == [("fresh", "s")]
+
+
+@pytest.mark.parametrize("name", ["BENCH_kernels.json", "BENCH_serve.json"])
+def test_committed_baselines_are_wellformed(name):
+    path = os.path.join(REPO_ROOT, name)
+    assert os.path.exists(path), f"{name} must be committed at the repo root"
+    doc = pb.load(path)
+    assert doc["version"] == 1 and doc["entries"]
+    for e in doc["entries"]:
+        assert set(e) == {"op", "shape", "metrics"}
+        assert e["metrics"] and all(
+            k in pb.METRIC_DIRECTION and v > 0 for k, v in e["metrics"].items())
+    # self-compare is a no-op: the committed baseline never regresses vs itself
+    diff = pb.compare(doc, doc["entries"])
+    assert not diff["regressions"] and not diff["missing"] and not diff["new"]
+
+
+def test_committed_serve_baseline_shows_burst_speedup():
+    """The PR's decode speed pass must be visible in the committed trajectory:
+    burst decoding beats tick-at-a-time decode tokens/sec on this host."""
+    doc = pb.load(os.path.join(REPO_ROOT, "BENCH_serve.json"))
+    rows = {e["shape"]: e["metrics"]["tokens_per_s"]
+            for e in doc["entries"] if e["op"] == "serve_decode"}
+    assert rows["slots=4,users=2,burst=8"] > rows["slots=4,users=2,burst=1"]

@@ -315,3 +315,141 @@ def test_submit_without_bank_accepts_any_user_id():
     eng.submit(r)
     eng.run_until_idle()
     assert r.status == "done" and eng.stats["rejected"] == 0
+
+
+# ---------------------------------------------------------------------------
+# burst decoding
+# ---------------------------------------------------------------------------
+
+def _run_engine(cfg, params, banks, prompts, max_new, **kw):
+    eng = ServeEngine(cfg, params, slots=len(prompts), max_len=64,
+                      user_adapters=banks, **kw)
+    reqs = [Request(rid=i, user=i % 2 if banks else 0, prompt=p,
+                    max_new=max_new) for i, p in enumerate(prompts)]
+    for r in reqs:
+        eng.submit(r)
+    eng.run_until_idle()
+    return [r.out for r in reqs], eng
+
+
+@pytest.mark.parametrize("with_adapters", [False, True])
+def test_burst_decode_tokens_bit_identical(with_adapters):
+    """decode_burst=N fuses ticks into one lax.scan; emitted tokens must be
+    bit-identical to tick-at-a-time decoding (max_new=17 forces uneven burst
+    splits: 8+4+2+1 plus the TTFT-protected first tick)."""
+    cfg, params, key = _tiny()
+    banks = _banks(cfg, key) if with_adapters else None
+    prompts = _prompts(cfg, (5, 9, 13))
+    o1, e1 = _run_engine(cfg, params, banks, prompts, max_new=17)
+    o2, e2 = _run_engine(cfg, params, banks, prompts, max_new=17,
+                         decode_burst=8)
+    assert o1 == o2
+    assert e2.stats["tokens"] == e1.stats["tokens"]
+    assert all(len(o) == 17 for o in o2)
+
+
+def test_burst_decode_staggered_completion():
+    """Mixed max_new across slots: bursts must shrink to the soonest
+    completion so no slot ever overruns its budget."""
+    cfg, params, key = _tiny()
+    prompts = _prompts(cfg, (5, 9))
+    eng = ServeEngine(cfg, params, slots=2, max_len=64, decode_burst=16)
+    r0 = Request(rid=0, user=0, prompt=prompts[0], max_new=3)
+    r1 = Request(rid=1, user=0, prompt=prompts[1], max_new=21)
+    eng.submit(r0)
+    eng.submit(r1)
+    eng.run_until_idle()
+    assert len(r0.out) == 3 and len(r1.out) == 21
+    ref_eng = ServeEngine(cfg, params, slots=2, max_len=64)
+    q0 = Request(rid=0, user=0, prompt=prompts[0], max_new=3)
+    q1 = Request(rid=1, user=0, prompt=prompts[1], max_new=21)
+    ref_eng.submit(q0)
+    ref_eng.submit(q1)
+    ref_eng.run_until_idle()
+    assert r0.out == q0.out and r1.out == q1.out
+
+
+# ---------------------------------------------------------------------------
+# int8-stored adapter banks
+# ---------------------------------------------------------------------------
+
+def _dequant_banks(banks):
+    from repro.kernels.multi_lora import quant_rows
+    out = []
+    for a in banks:
+        d = {}
+        for tap, leaves in a.items():
+            d[tap] = {}
+            for n, leaf in leaves.items():
+                q, s = quant_rows(leaf)
+                d[tap][n] = (q.astype(jnp.float32) * s).astype(leaf.dtype)
+        out.append(d)
+    return out
+
+
+def test_int8_bank_matches_dequantized_f32_serving():
+    """bank_store="int8" must emit exactly the tokens of serving the
+    explicitly round-tripped (dequantised) f32 bank — the int8 path changes
+    storage and load, never math."""
+    cfg, params, key = _tiny()
+    banks = _banks(cfg, key)
+    prompts = _prompts(cfg, (5, 9, 13))
+    o_q8, e_q8 = _run_engine(cfg, params, banks, prompts, max_new=8,
+                             bank_store="int8")
+    o_f32, _ = _run_engine(cfg, params, _dequant_banks(banks), prompts,
+                           max_new=8)
+    assert o_q8 == o_f32
+    # the stored bank is int8 codes + f32 scales, never f32 weights
+    for tap, leaves in e_q8.bank.items():
+        assert set(n.rsplit("_", 1)[-1] for n in leaves) == {"q", "scale"}
+        for n, leaf in leaves.items():
+            if n.endswith("_q"):
+                assert leaf.dtype == jnp.int8
+
+
+def test_int8_bank_install_adapters_quantizes_incoming():
+    """Hot-swapping f32 adapters into an int8 bank quantises on install and
+    the swap actually changes served tokens for that user only."""
+    cfg, params, key = _tiny()
+    banks = _banks(cfg, key)
+    prompts = _prompts(cfg, (6, 6))
+    eng = ServeEngine(cfg, params, slots=2, max_len=64, user_adapters=banks,
+                      bank_store="int8")
+    from repro.core import gl
+    from repro.configs.base import ColaConfig
+    cc = ColaConfig(mode="lora", family="lowrank", taps="qv", rank=4)
+    new = gl.init_adapters(cfg, cc, jax.random.fold_in(key, 7))
+    new = jax.tree.map(lambda a: a + 0.5, new)
+    assert eng.install_adapters(1, new, version=1)
+    assert eng.stats["bank_installs"] == 1
+    for tap, leaves in eng.bank.items():
+        for n, leaf in leaves.items():
+            if n.endswith("_q"):
+                assert leaf.dtype == jnp.int8
+    # stale version is still rejected on the q8 path
+    assert not eng.install_adapters(1, new, version=1)
+    assert eng.stats["bank_rejected"] == 1
+
+
+# ---------------------------------------------------------------------------
+# decode kernel switch (ref backend vs fused interpret kernels)
+# ---------------------------------------------------------------------------
+
+def test_decode_tokens_identical_across_kernel_backends():
+    """End-to-end engine regression for the fused decode kernels: tokens under
+    the pallas_interpret backend (fused decode attention + grouped multi-LoRA)
+    match the jnp reference backend exactly. Uses d_head=64 so the decode
+    attention kernel's support gate engages."""
+    from repro.kernels import ops
+    cfg, params, key = _tiny()
+    cfg = cfg.replace(n_heads=2, n_kv_heads=1, d_head=64)
+    params = M.init(cfg, jax.random.PRNGKey(0))
+    banks = _banks(cfg, key)
+    prompts = _prompts(cfg, (5, 9))
+    o_ref, _ = _run_engine(cfg, params, banks, prompts, max_new=5)
+    ops.set_backend("pallas_interpret")
+    try:
+        o_int, _ = _run_engine(cfg, params, banks, prompts, max_new=5)
+    finally:
+        ops.set_backend("ref")
+    assert o_ref == o_int
