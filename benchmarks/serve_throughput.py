@@ -32,13 +32,17 @@ from repro.runtime.serve_loop import Request, ServeEngine  # noqa: E402
 
 
 def _reset(eng, cfg, slots, max_len):
-    """Reset serving state but keep the engine's compiled jit callables."""
+    """Reset serving state but keep the engine's compiled jit callables (and,
+    with a tiered store, its warmed residency — steady-state, not cold-start)."""
     eng.cache = M.init_cache(cfg, slots, max_len)
     eng.finished = []
     eng.queue = []
+    eng.active = [None] * slots
     eng.positions[:] = 0
-    eng.stats = {k: 0 if isinstance(v, int) else 0.0
-                 for k, v in eng.stats.items()}
+    for k, v in eng.stats.items():
+        eng.stats[k] = 0 if isinstance(v, int) else 0.0
+    if eng.store is not None:
+        eng.store.reset_counters()
 
 
 def _run_once(eng, prompts, users, max_new):
@@ -80,6 +84,104 @@ def bench(prompt_len=64, slots=4, n_users=2, n_requests=8, max_new=8, seed=0,
     return out
 
 
+def _store_trace(n_users, n_requests, rng):
+    """Request trace over a large user population: half the requests follow a
+    zipf-ish popularity (a few hot users), half stride through the cold tail —
+    so an R-row residency cache sees both reuse (hits) and churn (evictions)."""
+    w = 1.0 / np.arange(1, n_users + 1)
+    hot = rng.choice(n_users, size=n_requests, p=w / w.sum())
+    users = []
+    for i in range(n_requests):
+        users.append(int(hot[i]) if i % 2 == 0 else (37 * i) % n_users)
+    return users
+
+
+def bench_store(n_users=256, resident=32, slots=8, n_requests=48,
+                prompt_len=32, max_new=8, seed=0, check_identity=False,
+                **engine_kw):
+    """Tiered-store serving over U users with an R-row resident cache.
+
+    Returns hit/eviction/byte metrics and decode throughput; with
+    ``check_identity`` the emitted tokens are also asserted bit-identical to
+    an all-resident (dense U-user bank) engine on the same trace."""
+    cfg = bench_cfg("smollm-135m")
+    max_len = max(2 * prompt_len, prompt_len + max_new + 8)
+    key = jax.random.PRNGKey(seed)
+    params = M.init(cfg, key)
+    cc = ColaConfig(mode="lora", family="lowrank", taps="qv", rank=4)
+    banks = [gl.init_adapters(cfg, cc, jax.random.fold_in(key, u))
+             for u in range(n_users)]
+    rng = np.random.default_rng(seed)
+    prompts = [rng.integers(0, cfg.vocab_size, size=prompt_len)
+               for _ in range(n_requests)]
+    users = _store_trace(n_users, n_requests, rng)
+
+    def trace(eng):
+        reqs = [Request(rid=i, user=users[i], prompt=p, max_new=max_new)
+                for i, p in enumerate(prompts)]
+        t0 = time.perf_counter()
+        for r in reqs:
+            eng.submit(r)
+        eng.run_until_idle()
+        return [r.out for r in reqs], time.perf_counter() - t0
+
+    eng = ServeEngine(cfg, params, slots=slots, max_len=max_len,
+                      user_adapters=banks, resident_slots=resident,
+                      **engine_kw)
+    _run_once(eng, prompts[:slots], users[:slots], max_new)   # warmup/compile
+    _reset(eng, cfg, slots, max_len)
+    outs, wall = trace(eng)
+    tp = eng.throughput()
+    sm = tp["store"]
+    out = {"wall": wall, "decode_tok_per_s": tp["decode_tok_per_s"],
+           "hit_rate": sm["hit_rate"], "evictions": sm["evictions"],
+           "fetch_time": sm["fetch_time"],
+           "resident_bytes": sm["resident_bytes"],
+           "host_bytes": sm["host_bytes"]}
+    if check_identity:
+        ref = ServeEngine(cfg, params, slots=slots, max_len=max_len,
+                          user_adapters=banks,
+                          **{k: v for k, v in engine_kw.items()
+                             if k != "cluster_threshold"})
+        ref_outs, _ = trace(ref)
+        assert outs == ref_outs, (
+            f"resident-store serving (R={resident}) diverged from the "
+            f"all-resident engine on a U={n_users} trace")
+        out["identical_to_all_resident"] = True
+        dense_bytes = sum(int(l.nbytes) for l in jax.tree.leaves(ref.bank))
+        out["dense_bytes"] = dense_bytes
+    return out
+
+
+def store_sweep(report):
+    """U >> R residency sweep: hit rate / evictions / device bytes, plus the
+    acceptance trace (U=1024, R=32) checked bit-identical to all-resident."""
+    report("# Tiered adapter store: U users through an R-row resident cache")
+    report(fmt_row("users", "resident", "store", "hit_rate", "evictions",
+                   "resident_MB", "host_MB", "decode_tok_s", "wall_s"))
+    for n_users, resident, bank_store in ((256, 16, "f32"), (256, 64, "f32"),
+                                          (256, 32, "int8")):
+        r = bench_store(n_users=n_users, resident=resident,
+                        bank_store=bank_store)
+        report(fmt_row(n_users, resident, bank_store, f"{r['hit_rate']:.3f}",
+                       r["evictions"], f"{r['resident_bytes'] / 2**20:.2f}",
+                       f"{r['host_bytes'] / 2**20:.2f}",
+                       f"{r['decode_tok_per_s']:.1f}", f"{r['wall']:.3f}"))
+    # acceptance: 1024-user trace, 32 resident rows, bit-identical tokens
+    r = bench_store(n_users=1024, resident=32, n_requests=64,
+                    check_identity=True)
+    report(fmt_row(1024, 32, "f32", f"{r['hit_rate']:.3f}", r["evictions"],
+                   f"{r['resident_bytes'] / 2**20:.2f}",
+                   f"{r['host_bytes'] / 2**20:.2f}",
+                   f"{r['decode_tok_per_s']:.1f}", f"{r['wall']:.3f}"))
+    report(f"# U=1024 R=32: bit-identical to all-resident engine; device "
+           f"adapter bytes {r['resident_bytes']} vs dense {r['dense_bytes']} "
+           f"({r['dense_bytes'] / max(r['resident_bytes'], 1):.0f}x), "
+           f"hit rate {r['hit_rate']:.3f}, {r['evictions']} evictions, "
+           f"fetch time {r['fetch_time'] * 1e3:.1f}ms")
+    assert r["evictions"] > 0, "acceptance trace must exercise eviction"
+
+
 def run(report):
     report("# FTaaS serving: batched vs single-row prefill "
            "(TTFT from submit, all requests submitted up front)")
@@ -103,6 +205,8 @@ def run(report):
                f"batched prefill TTFT speedup {s:.2f}x")
     assert all(s > 1.0 for k, s in speedups.items() if k[0] >= 64), \
         "batched prefill must beat single-row TTFT at prompt length >= 64"
+    report("")
+    store_sweep(report)
 
 
 # ---------------------------------------------------------------------------
@@ -130,12 +234,25 @@ def collect() -> list[dict]:
                             tokens_per_s=decq8))
     entries.append(pb.entry("serve_prefill", "slots=4,users=2,prompt=64",
                             tokens_per_s=pre))
+    st = bench_store(n_users=256, resident=32)
+    entries.append(pb.entry("serve_store", "users=256,resident=32,slots=8",
+                            tokens_per_s=st["decode_tok_per_s"],
+                            hit_rate=st["hit_rate"]))
+    st8 = bench_store(n_users=256, resident=32, bank_store="int8")
+    entries.append(pb.entry("serve_store",
+                            "users=256,resident=32,slots=8,int8",
+                            tokens_per_s=st8["decode_tok_per_s"],
+                            hit_rate=st8["hit_rate"]))
     return entries
 
 
 def main(argv=None) -> int:
     from benchmarks import perf_baseline as pb
     import jax as _jax
+    argv = list(sys.argv[1:] if argv is None else argv)
+    if "--store-sweep" in argv:
+        store_sweep(lambda *a: print(*a, flush=True))
+        return 0
     return pb.run_cli(argv, collect=collect, baseline_name="BENCH_serve.json",
                       meta={"suite": "serve_throughput",
                             "device": _jax.devices()[0].platform})

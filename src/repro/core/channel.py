@@ -67,13 +67,19 @@ class OffloadChannel:
                  injector: FaultInjector | None = None,
                  policy: RetryPolicy | None = None,
                  max_update_norm: float = 1e4,
-                 quarantine_after: int = 2):
+                 quarantine_after: int = 2,
+                 on_commit=None):
         self.offloader = offloader
         self.user = user
         self.injector = injector
         self.policy = policy or RetryPolicy()
         self.max_update_norm = max_update_norm
         self.quarantine_after = quarantine_after
+        # publication hook: called as on_commit(user, version, adapters)
+        # after every validated commit — the push-based counterpart to
+        # polling `publish_banks` (e.g. a serving engine's tiered adapter
+        # store subscribing to fit results). Only ever sees committed banks.
+        self.on_commit = on_commit
 
         self.version = 0
         self.last_good: dict = offloader.adapters   # validated by construction
@@ -238,6 +244,8 @@ class OffloadChannel:
             self.last_good = delivered
             self._fail_streak = 0
             h["fits_committed"] += 1
+            if self.on_commit is not None:
+                self.on_commit(self.user, self.version, delivered)
             return delivered
         # round failed: roll back to last-good, drop the round's data
         self._restore(snap)

@@ -66,6 +66,37 @@ def unmerge_adapters(cfg: ModelConfig, params: dict, families: dict[str, str],
     return merge_adapters(cfg, params, families, adapters, scale, sign=-1.0)
 
 
+def merge_adapter_pytrees(banks: list[dict], weights: list[float] | None = None
+                          ) -> dict:
+    """Weighted average of per-user adapter pytrees ("adapter soup") — the
+    cluster-merge primitive for task-similarity clustering: one merged adapter
+    serves every member of a cluster.
+
+    For the ``linear`` family this is exactly the mean of the members'
+    delta-Ws (Prop 2 merging commutes with averaging); for ``lowrank`` the
+    leaf-wise mean is the standard rank-preserving approximation (the exact
+    delta mean of K rank-r adapters is rank K*r). All banks must share one
+    pytree structure and leaf shapes.
+    """
+    if not banks:
+        raise ValueError("merge_adapter_pytrees: need at least one bank")
+    if weights is None:
+        weights = [1.0 / len(banks)] * len(banks)
+    if len(weights) != len(banks):
+        raise ValueError(f"got {len(banks)} banks but {len(weights)} weights")
+    treedefs = {jax.tree.structure(b) for b in banks}
+    if len(treedefs) != 1:
+        raise ValueError(f"bank structures differ: {treedefs}")
+    shapes = {tuple(l.shape for l in jax.tree.leaves(b)) for b in banks}
+    if len(shapes) != 1:
+        raise ValueError(f"bank leaf shapes differ: {shapes}")
+    out = jax.tree.map(lambda l: weights[0] * l.astype(jnp.float32), banks[0])
+    for w, b in zip(weights[1:], banks[1:]):
+        out = jax.tree.map(lambda acc, l, w=w: acc + w * l.astype(jnp.float32),
+                           out, b)
+    return out
+
+
 def merged_params(cfg: ModelConfig, params: dict, spec_or_families,
                   adapters: dict, scale: float | None = None) -> dict:
     if isinstance(spec_or_families, ColaSpec):

@@ -165,6 +165,14 @@ def quant_rows(w: Array) -> tuple[Array, Array]:
     return q, scale
 
 
+def dequant_rows(q: Array, scale: Array, dtype=jnp.float32) -> Array:
+    """Inverse of ``quant_rows`` — the host-side decode used when an
+    int8-stored bank entry must be read back as f32 (similarity vectors,
+    cluster merging, tests). The serving path never calls this: kernels
+    dequantise on tile load."""
+    return (q.astype(jnp.float32) * scale.astype(jnp.float32)).astype(dtype)
+
+
 def _q8_kernel(x_ref, aq_ref, as_ref, bq_ref, bs_ref, idx_ref, y_ref, acc_ref,
                *, scale, block_t):
     ui = pl.program_id(1)

@@ -1,0 +1,415 @@
+"""Tiered adapter store: host-tier banks + LRU device residency.
+
+ColA's FTaaS premise is *many* users per base model, but a device-resident
+stacked bank (`stack_user_adapters`) caps the served population at whatever
+fits in HBM — the user axis U is the bank's leading dimension. This module
+decouples user count from device memory with two tiers:
+
+- **Host tier** (the system of record): one numpy adapter pytree per user,
+  stored f32 or int8 (codes + per-row scales, matching ``quantize_bank``),
+  each carrying a version — the level that `publish_banks` / an
+  `OffloadChannel`'s ``on_commit`` land validated fits in. Host RAM scales to
+  millions of users; nothing here touches the accelerator.
+
+- **Device tier**: a fixed-capacity resident bank of ``R`` rows (R << U) in
+  the exact layout the ``multi_lora`` kernels consume — leaves
+  ``(L?, R, d, r)`` — plus a user -> resident-row map. Decode batches index
+  adapters by *resident row*, never by global user id, so kernel cost and
+  adapter HBM are bounded by R.
+
+Residency protocol (driven by ``ServeEngine``):
+
+- ``acquire(user)`` pins a user before admission; a pinned user's row can
+  never be evicted (their requests are live or queued into slots). ``acquire``
+  refuses when the distinct pinned set would exceed R — admission then waits
+  instead of deadlocking residency.
+- ``ensure_resident(users)`` is prefetch-on-admission: hits touch the LRU
+  clock; misses pick a free row (else evict the least-recently-used
+  *unpinned* row) and land the host entry via per-leaf index updates
+  (``bank.at[..., row].set``) — never a full-bank rebuild/restack.
+- ``release(user)`` unpins on request completion (refcounted: a user may own
+  several slots).
+
+Layered on top: **task-similarity clustering** ("Collaborative and Efficient
+Fine-tuning: Leveraging Task Similarity", PAPERS.md). ``build_clusters``
+groups users whose adapter deltas are cosine-similar onto one *cluster*
+entry — ``mode="shared"`` serves the representative member's adapters,
+``mode="merged"`` the member average (``core.merge.merge_adapter_pytrees``).
+Cluster members share a single resident row, shrinking the hot working set.
+The mapping is copy-on-write: a member's own ``install`` splits them back
+onto a private entry without perturbing the rest of the cluster.
+
+Since every adapter contributes to a masked multi-LoRA accumulation as exact
+float zeros for rows it does not own, serving through a resident bank of any
+size R emits tokens *bit-identical* to the all-resident engine (asserted by
+tests/test_adapter_store.py and benchmarks/serve_throughput.py).
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Iterable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+UserKey = tuple  # ("user", uid) | ("cluster", cid)
+
+
+# ---------------------------------------------------------------------------
+# host-tier encoding
+# ---------------------------------------------------------------------------
+
+def _to_host(tree: dict) -> dict:
+    return jax.tree.map(lambda l: np.asarray(jax.device_get(l)), tree)
+
+
+def _quantize_host(tree: dict) -> dict:
+    """f32 per-user pytree -> int8 host entry (codes + per-row scales)."""
+    from repro.kernels import multi_lora as ml
+    out: dict[str, Any] = {}
+    for tap, leaves in tree.items():
+        entry = {}
+        for name, leaf in leaves.items():
+            q, s = ml.quant_rows(jnp.asarray(leaf, jnp.float32))
+            entry[f"{name}_q"] = np.asarray(q)
+            entry[f"{name}_scale"] = np.asarray(s)
+        out[tap] = entry
+    return out
+
+
+def _dequantize_host(entry: dict) -> dict:
+    """int8 host entry -> f32 pytree (for similarity vectors / merging)."""
+    from repro.kernels import multi_lora as ml
+    out: dict[str, Any] = {}
+    for tap, leaves in entry.items():
+        out[tap] = {}
+        for name in sorted({n.rsplit("_", 1)[0] for n in leaves}):
+            out[tap][name] = np.asarray(ml.dequant_rows(
+                jnp.asarray(leaves[f"{name}_q"]),
+                jnp.asarray(leaves[f"{name}_scale"])))
+    return out
+
+
+def _structure(adapters: dict) -> dict:
+    return {tap: {n: tuple(np.shape(l)) for n, l in sorted(leaves.items())}
+            for tap, leaves in adapters.items()}
+
+
+def _cosine(a: np.ndarray, b: np.ndarray) -> float:
+    na, nb = float(np.linalg.norm(a)), float(np.linalg.norm(b))
+    if na == 0.0 and nb == 0.0:
+        return 1.0          # two untrained (all-zero-delta) users are alike
+    if na == 0.0 or nb == 0.0:
+        return 0.0
+    return float(np.dot(a, b) / (na * nb))
+
+
+class AdapterStore:
+    """Host-tier adapter bank with a fixed-R LRU device-resident cache."""
+
+    def __init__(self, resident: int, *, store: str = "f32"):
+        if resident < 1:
+            raise ValueError(f"resident slot count must be >= 1, got {resident}")
+        assert store in ("f32", "int8"), store
+        self.resident = int(resident)
+        self.store = store
+        # host tier: key -> numpy pytree; users route to a key (own or cluster)
+        self._host: dict[UserKey, dict] = {}
+        self._route: dict[int, UserKey] = {}
+        self._versions: dict[int, int] = {}
+        self._members: dict[int, set[int]] = {}   # cluster id -> member uids
+        self._template: dict | None = None        # raw f32 structure signature
+        # device tier
+        self.bank: dict | None = None
+        self._slot_key: list[UserKey | None] = [None] * self.resident
+        self._key_slot: dict[UserKey, int] = {}
+        self._last_used: list[int] = [0] * self.resident
+        self._clock = 0
+        self._pins: dict[int, int] = {}           # uid -> live/queued refcount
+        self.counters = {
+            "hits": 0, "misses": 0, "evictions": 0, "fetches": 0,
+            "fetch_time": 0.0, "registered": 0, "installs": 0, "splits": 0,
+        }
+
+    @classmethod
+    def from_users(cls, user_adapters: Sequence[dict], *, resident: int,
+                   store: str = "f32") -> "AdapterStore":
+        st = cls(resident, store=store)
+        for uid, adapters in enumerate(user_adapters):
+            st.register(uid, adapters)
+        return st
+
+    # -- host tier ---------------------------------------------------------
+    def _encode(self, adapters: dict) -> dict:
+        return (_to_host(adapters) if self.store == "f32"
+                else _quantize_host(adapters))
+
+    def _f32_entry(self, key: UserKey) -> dict:
+        entry = self._host[key]
+        return entry if self.store == "f32" else _dequantize_host(entry)
+
+    def register(self, user: int, adapters: dict, version: int = 0) -> None:
+        """Add (or reset) one user's adapters in the host tier — the entry
+        point for brand-new users arriving from training channels. Validates
+        the pytree structure against the store template."""
+        user = int(user)
+        struct = _structure(adapters)
+        if self._template is None:
+            self._template = struct
+            self._init_bank(adapters)
+        elif struct != self._template:
+            raise ValueError(
+                f"user {user} adapter structure does not match the store "
+                f"template: got {struct}, want {self._template}")
+        key: UserKey = ("user", user)
+        self._host[key] = self._encode(adapters)
+        self._route[user] = key
+        self._versions[user] = int(version)
+        self.counters["registered"] += 1
+        slot = self._key_slot.get(key)
+        if slot is not None:     # re-registration of a resident user
+            self._write_row(slot, self._host[key])
+
+    def knows(self, user: int) -> bool:
+        return int(user) in self._route
+
+    def version(self, user: int) -> int:
+        return self._versions[int(user)]
+
+    def users(self) -> list[int]:
+        return sorted(self._route)
+
+    def cluster_of(self, user: int) -> int | None:
+        key = self._route[int(user)]
+        return key[1] if key[0] == "cluster" else None
+
+    # -- device tier -------------------------------------------------------
+    def _init_bank(self, adapters: dict) -> None:
+        host0 = self._encode(adapters)
+        bank: dict[str, Any] = {}
+        for tap, leaves in host0.items():
+            entry = {}
+            for name, leaf in leaves.items():
+                # user axis goes after any leading layer axis, mirroring
+                # stack_user_adapters' (L, U, d, r) layout
+                axis = 1 if leaf.ndim > 2 else 0
+                shape = leaf.shape[:axis] + (self.resident,) + leaf.shape[axis:]
+                entry[name] = jnp.zeros(shape, leaf.dtype)
+            bank[tap] = entry
+        self.bank = bank
+
+    def _write_row(self, slot: int, entry: dict) -> None:
+        """Land one host entry in resident row ``slot`` via per-leaf index
+        updates — the bank is never rebuilt or restacked."""
+        new_bank: dict[str, Any] = {}
+        for tap, leaves in self.bank.items():
+            new_entry = dict(leaves)
+            for name, leaf in leaves.items():
+                h = jnp.asarray(entry[tap][name])
+                if h.ndim > 2:
+                    new_entry[name] = leaf.at[:, slot].set(h)
+                else:
+                    new_entry[name] = leaf.at[slot].set(h)
+            new_bank[tap] = new_entry
+        self.bank = new_bank
+
+    def _pinned_keys(self) -> set[UserKey]:
+        return {self._route[u] for u in self._pins}
+
+    def acquire(self, user: int) -> bool:
+        """Pin a user ahead of admission. False when the user is unknown or
+        pinning them would need more distinct resident rows than exist —
+        admission must wait for live requests to complete."""
+        user = int(user)
+        if user not in self._route:
+            return False
+        if user in self._pins:
+            self._pins[user] += 1
+            return True
+        pinned = self._pinned_keys()
+        if self._route[user] not in pinned and len(pinned) >= self.resident:
+            return False
+        self._pins[user] = 1
+        return True
+
+    def release(self, user: int) -> None:
+        user = int(user)
+        n = self._pins.get(user, 0)
+        if n <= 1:
+            self._pins.pop(user, None)
+        else:
+            self._pins[user] = n - 1
+
+    def pinned_count(self) -> int:
+        return len(self._pins)
+
+    def resident_index(self, user: int) -> int | None:
+        return self._key_slot.get(self._route[int(user)])
+
+    def ensure_resident(self, users: Iterable[int]) -> np.ndarray:
+        """Prefetch-on-admission: make every user's adapters device-resident
+        and return their resident row indices, evicting LRU unpinned rows as
+        needed. Raises RuntimeError only if every row is pinned by some *other*
+        user (the engine's ``acquire`` gate prevents this in normal flow)."""
+        users = [int(u) for u in users]
+        idx = np.zeros(len(users), np.int32)
+        for j, user in enumerate(users):
+            key = self._route[user]
+            slot = self._key_slot.get(key)
+            if slot is None:
+                slot = self._fetch(key)
+            else:
+                self.counters["hits"] += 1
+            self._clock += 1
+            self._last_used[slot] = self._clock
+            idx[j] = slot
+        return idx
+
+    def _fetch(self, key: UserKey) -> int:
+        self.counters["misses"] += 1
+        slot = next((s for s, k in enumerate(self._slot_key) if k is None),
+                    None)
+        if slot is None:
+            pinned = self._pinned_keys()
+            victims = [(self._last_used[s], s)
+                       for s, k in enumerate(self._slot_key)
+                       if k not in pinned]
+            if not victims:
+                raise RuntimeError(
+                    "adapter store: no evictable resident row (all "
+                    f"{self.resident} rows pinned by live users)")
+            _, slot = min(victims)
+            del self._key_slot[self._slot_key[slot]]
+            self.counters["evictions"] += 1
+        t0 = time.perf_counter()
+        self._write_row(slot, self._host[key])
+        self.counters["fetch_time"] += time.perf_counter() - t0
+        self.counters["fetches"] += 1
+        self._slot_key[slot] = key
+        self._key_slot[key] = slot
+        return slot
+
+    # -- adapter updates (train -> serve) ----------------------------------
+    def install(self, user: int, adapters: dict, version: int) -> None:
+        """Commit one user's new adapters into the host tier (and their
+        resident row, if any). A clustered user is split off their cluster
+        first (copy-on-write) — the cluster entry and every other member are
+        untouched. Version/finiteness gating is the caller's job
+        (``ServeEngine.install_adapters``); structure is validated here."""
+        user = int(user)
+        if user not in self._route:
+            self.register(user, adapters, version=version)
+            return
+        struct = _structure(adapters)
+        if struct != self._template:
+            raise ValueError(
+                f"user {user} install structure does not match the store "
+                f"template: got {struct}, want {self._template}")
+        if self._route[user][0] == "cluster":
+            self.split(user)
+        key = self._route[user]
+        self._host[key] = self._encode(adapters)
+        self._versions[user] = int(version)
+        self.counters["installs"] += 1
+        slot = self._key_slot.get(key)
+        if slot is not None:
+            self._write_row(slot, self._host[key])
+
+    def split(self, user: int) -> None:
+        """Copy-on-write split: route a cluster member back onto their own
+        host entry. The cluster row (and its other members' serving) is not
+        perturbed; the user's residency re-resolves on their next admission
+        or install."""
+        user = int(user)
+        key = self._route[user]
+        if key[0] != "cluster":
+            return
+        self._members[key[1]].discard(user)
+        own: UserKey = ("user", user)
+        if own not in self._host:
+            # the member's pre-clustering entry was kept as their COW base;
+            # a user first registered *into* a cluster copies the cluster bank
+            self._host[own] = {tap: dict(leaves)
+                               for tap, leaves in self._host[key].items()}
+        self._route[user] = own
+        self.counters["splits"] += 1
+
+    # -- task-similarity clustering ----------------------------------------
+    def _flat_vector(self, user: int) -> np.ndarray:
+        entry = self._f32_entry(("user", int(user)))
+        parts = [np.asarray(entry[tap][name], np.float64).ravel()
+                 for tap in sorted(entry)
+                 for name in sorted(entry[tap])]
+        return np.concatenate(parts)
+
+    def build_clusters(self, threshold: float, mode: str = "shared"
+                       ) -> dict[int, list[int]]:
+        """Greedy cosine clustering of user adapter deltas: each user joins
+        the first cluster whose representative has similarity >= threshold.
+        Multi-member clusters get one shared host entry (``shared``: the
+        representative's adapters; ``merged``: the member mean via
+        ``merge_adapter_pytrees``) and thus one resident row. Returns
+        {cluster id: members} for multi-member clusters."""
+        assert mode in ("shared", "merged"), mode
+        if self._pins:
+            raise RuntimeError("cannot re-cluster while users are pinned "
+                               "(live or queued requests hold rows)")
+        users = sorted(u for u, k in self._route.items() if k[0] == "user")
+        vectors = {u: self._flat_vector(u) for u in users}
+        groups: list[list[int]] = []
+        reps: list[np.ndarray] = []
+        for u in users:
+            for ci, rep in enumerate(reps):
+                if _cosine(vectors[u], rep) >= threshold:
+                    groups[ci].append(u)
+                    break
+            else:
+                groups.append([u])
+                reps.append(vectors[u])
+        next_cid = max(self._members, default=-1) + 1
+        out: dict[int, list[int]] = {}
+        for members in groups:
+            if len(members) < 2:
+                continue
+            cid, next_cid = next_cid, next_cid + 1
+            ckey: UserKey = ("cluster", cid)
+            if mode == "shared":
+                entry = {tap: dict(leaves) for tap, leaves
+                         in self._host[("user", members[0])].items()}
+            else:
+                from repro.core.merge import merge_adapter_pytrees
+                entry = self._encode(merge_adapter_pytrees(
+                    [self._f32_entry(("user", u)) for u in members]))
+            self._host[ckey] = entry
+            self._members[cid] = set(members)
+            for u in members:
+                self._route[u] = ckey
+            out[cid] = list(members)
+        return out
+
+    # -- metrics -----------------------------------------------------------
+    def resident_bytes(self) -> int:
+        if self.bank is None:
+            return 0
+        return int(sum(l.nbytes for l in jax.tree.leaves(self.bank)))
+
+    def host_bytes(self) -> int:
+        return int(sum(l.nbytes for entry in self._host.values()
+                       for l in jax.tree.leaves(entry)))
+
+    def metrics(self) -> dict:
+        out = dict(self.counters)
+        touches = out["hits"] + out["misses"]
+        out["hit_rate"] = out["hits"] / touches if touches else 0.0
+        out["pinned"] = len(self._pins)
+        out["resident_users"] = sum(k is not None for k in self._slot_key)
+        out["resident_bytes"] = self.resident_bytes()
+        out["host_users"] = len(self._route)
+        out["host_bytes"] = self.host_bytes()
+        out["clusters"] = sum(1 for m in self._members.values() if len(m) > 1)
+        return out
+
+    def reset_counters(self) -> None:
+        for k, v in self.counters.items():
+            self.counters[k] = 0 if isinstance(v, int) else 0.0

@@ -22,6 +22,15 @@ slot — fixed here and guarded by tests/test_serving.py).
 
 The token-by-token single-row path is kept as a reference implementation
 (``prefill_mode="reference"``) for the batched==reference equivalence tests.
+
+Adapter banks come in two flavours: the dense device-resident stack
+(``stack_user_adapters``; U bounded by HBM) and, with ``resident_slots=R``,
+the tiered ``AdapterStore`` (runtime/adapter_store.py): every user lives in a
+host-tier numpy bank and only an R-row LRU cache is device-resident. Admission
+pins users and prefetches their residency; decode/prefill then route by
+*resident row index* (``res_idx``), never by global user id, so adapter HBM
+and kernel cost are bounded by R while tokens stay bit-identical to the
+all-resident engine.
 """
 from __future__ import annotations
 
@@ -37,6 +46,7 @@ from repro.configs.base import ModelConfig
 from repro.core import gl
 from repro.core import taps as taps_lib
 from repro.models import model as model_lib
+from repro.runtime.adapter_store import AdapterStore
 
 Array = jax.Array
 
@@ -74,6 +84,22 @@ class Request:
 def stack_user_adapters(adapter_list: list[dict]) -> dict:
     """K per-user adapter pytrees {tap: {"A": (L?,d,r), "B": ...}} -> multi
     bank {tap: {"A": (L?,U,d,r), ...}} (user axis after any layer axis)."""
+    if not adapter_list:
+        raise ValueError("stack_user_adapters: need at least one per-user "
+                         "adapter pytree, got an empty list")
+
+    def _struct(a: dict) -> dict:
+        return {tap: {n: tuple(np.shape(l)) for n, l in sorted(leaves.items())}
+                for tap, leaves in a.items()}
+
+    want = _struct(adapter_list[0])
+    for u, a in enumerate(adapter_list[1:], start=1):
+        got = _struct(a)
+        if got != want:
+            raise ValueError(
+                f"stack_user_adapters: user {u} adapter structure {got} does "
+                f"not match user 0 structure {want} (all users must share the "
+                "same tap set and leaf shapes)")
     out: dict[str, Any] = {}
     for tap in adapter_list[0]:
         leaves = {}
@@ -107,11 +133,28 @@ def publish_banks(engine: "ServeEngine", channels) -> int:
     """Install every `OffloadChannel`'s bank that carries a validated version
     bump into the serving engine (the train -> serve hot-swap path). Channels
     that are quarantined or stale simply keep serving their last-good bank.
-    Returns the number of banks installed."""
+
+    With a tiered adapter store, a channel whose user the engine has never
+    seen is *registered* into the host tier (new users join serving without a
+    bank restack); without one, out-of-range users are skipped and counted in
+    ``stats["bank_unknown_user"]`` instead of crashing the publish sweep.
+    Returns the number of banks installed (registrations included)."""
     installed = 0
     for ch in channels:
+        if engine.store is not None:
+            if not engine.store.knows(ch.user):
+                if engine.install_adapters(ch.user, ch.adapters, ch.version):
+                    installed += 1
+                continue
+            if ch.version > engine.store.version(ch.user):
+                if engine.install_adapters(ch.user, ch.adapters, ch.version):
+                    installed += 1
+            continue
         if engine.bank_versions is None:
             break
+        if not 0 <= ch.user < engine.n_users:
+            engine.stats["bank_unknown_user"] += 1
+            continue
         if ch.version > int(engine.bank_versions[ch.user]):
             if engine.install_adapters(ch.user, ch.adapters, ch.version):
                 installed += 1
@@ -132,7 +175,10 @@ class ServeEngine:
                  max_len: int = 512, user_adapters: list[dict] | None = None,
                  taps: str = "qv", scale: float = 1.0,
                  prefill_mode: str = "batched", admit_batch: int | None = None,
-                 bank_store: str = "f32", decode_burst: int = 1):
+                 bank_store: str = "f32", decode_burst: int = 1,
+                 resident_slots: int | None = None,
+                 cluster_threshold: float | None = None,
+                 cluster_mode: str = "shared"):
         assert prefill_mode in ("batched", "reference"), prefill_mode
         assert bank_store in ("f32", "int8"), bank_store
         self.cfg = cfg
@@ -155,17 +201,31 @@ class ServeEngine:
         self.cache = model_lib.init_cache(cfg, slots, max_len)
         self.spec = None
         self.bank = None
+        self.store: AdapterStore | None = None
+        self.res_idx = np.zeros(slots, np.int32)   # per-slot resident row
         self.n_users = 0
         self.bank_versions: np.ndarray | None = None
         if user_adapters:
             tap_names = gl.select_taps(cfg, taps)
             self.spec = taps_lib.make_spec(family="multi_lowrank",
                                            taps=tap_names, scale=scale)
-            self.bank = stack_user_adapters(user_adapters)
-            if bank_store == "int8":
-                self.bank = quantize_bank(self.bank)
             self.n_users = len(user_adapters)
-            self.bank_versions = np.zeros(self.n_users, np.int64)
+            if resident_slots is not None:
+                # tiered store: host tier holds every user, the device bank is
+                # a fixed-R LRU cache — user count decouples from HBM.
+                self.store = AdapterStore.from_users(
+                    user_adapters, resident=resident_slots, store=bank_store)
+                if cluster_threshold is not None:
+                    self.store.build_clusters(cluster_threshold,
+                                              mode=cluster_mode)
+            else:
+                self.bank = stack_user_adapters(user_adapters)
+                if bank_store == "int8":
+                    self.bank = quantize_bank(self.bank)
+                self.bank_versions = np.zeros(self.n_users, np.int64)
+        elif resident_slots is not None:
+            raise ValueError("resident_slots requires user_adapters (the "
+                             "store template comes from the first user)")
         self._recurrent = model_lib.has_recurrent_state(cfg)
         self._decode = jax.jit(self._decode_fn)
         self._decode_n = jax.jit(self._decode_burst_fn, static_argnames=("n",))
@@ -173,7 +233,11 @@ class ServeEngine:
         self.stats = {"ticks": 0, "tokens": 0, "completed": 0, "admitted": 0,
                       "prefill_calls": 0, "prefill_tokens": 0,
                       "decode_time": 0.0, "prefill_time": 0.0,
-                      "rejected": 0, "bank_installs": 0, "bank_rejected": 0}
+                      "rejected": 0, "bank_installs": 0, "bank_rejected": 0,
+                      "bank_unknown_user": 0,
+                      "store_hits": 0, "store_misses": 0, "store_evictions": 0,
+                      "store_hit_rate": 0.0, "store_pinned": 0,
+                      "store_resident_bytes": 0, "store_fetch_time": 0.0}
 
     # -- jitted core -----------------------------------------------------
     # The bank is a jit *argument*, never a closure: a closed-over bank would
@@ -231,6 +295,16 @@ class ServeEngine:
                                    self.spec, self._cola_vars(bank, users))
         return model_lib.scatter_prefill_cache(cache, pre, slot_ids)
 
+    # -- dispatch routing --------------------------------------------------
+    # With a tiered store the jitted decode/prefill receive the R-row resident
+    # bank and *resident row indices*; without one, the dense U-user bank and
+    # global user ids. Shapes are stable either way, so jit caches one variant.
+    def _dispatch_bank(self):
+        return self.store.bank if self.store is not None else self.bank
+
+    def _dispatch_idx(self) -> np.ndarray:
+        return self.res_idx if self.store is not None else self.users
+
     # -- engine ------------------------------------------------------------
     def _validate(self, req: Request) -> str | None:
         if len(req.prompt) == 0:
@@ -241,7 +315,11 @@ class ServeEngine:
             return f"prompt length {len(req.prompt)} > max {self.max_len - 1}"
         if req.max_new <= 0:
             return f"max_new must be positive, got {req.max_new}"
-        if self.bank is not None and not 0 <= req.user < self.n_users:
+        if self.store is not None:
+            if not self.store.knows(req.user):
+                return (f"unknown user {req.user} (store has "
+                        f"{len(self.store.users())})")
+        elif self.bank is not None and not 0 <= req.user < self.n_users:
             return f"unknown user {req.user} (bank has {self.n_users})"
         return None
 
@@ -268,7 +346,14 @@ class ServeEngine:
         is rejected and the user keeps serving their last-good adapters
         (graceful degradation for quarantined / stale users). Returns whether
         the bank was installed.
+
+        With a tiered store, the commit lands in the host tier (registering
+        brand-new users); a clustered user is split off their shared adapter
+        (copy-on-write) without perturbing other members, and a live user's
+        resident row is refreshed in place.
         """
+        if self.store is not None:
+            return self._install_store(user, adapters, version)
         if self.bank is None or not 0 <= user < self.n_users:
             self.stats["bank_rejected"] += 1
             return False
@@ -311,6 +396,43 @@ class ServeEngine:
         self.stats["bank_installs"] += 1
         return True
 
+    def _install_store(self, user: int, adapters: dict, version: int) -> bool:
+        """Tiered-store install: host-tier commit + in-place resident-row
+        refresh. Unknown users are registered (they become servable without
+        any restack); known users need a version bump and finite leaves."""
+        st = self.store
+        leaves = jax.tree.leaves(adapters)
+        if not all(bool(jnp.isfinite(l).all()) for l in leaves):
+            self.stats["bank_rejected"] += 1   # unvalidated/poisoned bank
+            return False
+        try:
+            if not st.knows(user):
+                st.register(user, adapters, version=version)
+            else:
+                if version <= st.version(user):
+                    self.stats["bank_rejected"] += 1   # stale or replayed
+                    return False
+                st.install(user, adapters, version)
+        except ValueError:   # wrong tap set / leaf shapes for this store
+            self.stats["bank_rejected"] += 1
+            return False
+        self.stats["bank_installs"] += 1
+        # A COW split moves the user onto a fresh host entry while their live
+        # slots still point at the old (cluster) row: re-resolve residency now
+        # if a row is free/evictable, else their in-flight requests finish on
+        # the old adapters and residency refreshes at the next admission.
+        live = [i for i, r in enumerate(self.active)
+                if r is not None and r.user == user]
+        if live:
+            try:
+                row = st.ensure_resident([user])[0]
+            except RuntimeError:
+                pass
+            else:
+                for i in live:
+                    self.res_idx[i] = row
+        return True
+
     def _admit(self) -> None:
         """Admit up to ``admit_batch`` waiting requests into free slots and
         prefill their prompts. The batched path pads all admitted prompts to
@@ -322,6 +444,11 @@ class ServeEngine:
             if len(admitted) >= self.admit_batch or not self.queue:
                 break
             if self.active[i] is None:
+                if (self.store is not None
+                        and not self.store.acquire(self.queue[0].user)):
+                    # every resident row is pinned by a distinct live user:
+                    # admission waits (FIFO) until a request completes.
+                    break
                 req = self.queue.pop(0)
                 req.t_admit = now
                 self.active[i] = req
@@ -331,6 +458,13 @@ class ServeEngine:
                 admitted.append(i)
         if not admitted:
             return
+        if self.store is not None:
+            # prefetch-on-admission: residency is ensured (host -> device
+            # fetch on miss) before any prefill/decode touches these slots.
+            res_rows = self.store.ensure_resident(
+                [self.active[i].user for i in admitted])
+            for k, i in enumerate(admitted):
+                self.res_idx[i] = res_rows[k]
         self.stats["admitted"] += len(admitted)
         # the last prompt token is fed through the first decode tick (it
         # produces the first output token); prefill covers prompt[:-1].
@@ -358,9 +492,9 @@ class ServeEngine:
             # instead of one decode step per token).
             for i, feed in rows:
                 self.cache = self._prefill(
-                    self.params, self.bank, self.cache,
+                    self.params, self._dispatch_bank(), self.cache,
                     jnp.asarray(feed[None, :]),
-                    jnp.asarray(self.users[i:i + 1]),
+                    jnp.asarray(self._dispatch_idx()[i:i + 1]),
                     jnp.asarray(np.array([i], np.int32)))
             return
         # attention KV: pad-token garbage beyond a row's true length is safe
@@ -375,11 +509,11 @@ class ServeEngine:
         slot_ids = np.full((j,), self.slots, np.int32)
         for r, (i, feed) in enumerate(rows):
             toks[r, :len(feed)] = feed
-            users[r] = self.users[i]
+            users[r] = self._dispatch_idx()[i]
             slot_ids[r] = i
-        self.cache = self._prefill(self.params, self.bank, self.cache,
-                                   jnp.asarray(toks), jnp.asarray(users),
-                                   jnp.asarray(slot_ids))
+        self.cache = self._prefill(self.params, self._dispatch_bank(),
+                                   self.cache, jnp.asarray(toks),
+                                   jnp.asarray(users), jnp.asarray(slot_ids))
 
     def _feed(self, slot: int, token: int, pos: int) -> None:
         """Reference single-row prefill step: decode one prompt token into one
@@ -391,9 +525,11 @@ class ServeEngine:
         positions[slot] = pos
         live = np.zeros((self.slots,), bool)
         live[slot] = True
-        _, self.cache = self._decode(self.params, self.bank, self.cache,
-                                     jnp.asarray(toks), jnp.asarray(positions),
-                                     jnp.asarray(self.users), jnp.asarray(live))
+        _, self.cache = self._decode(self.params, self._dispatch_bank(),
+                                     self.cache, jnp.asarray(toks),
+                                     jnp.asarray(positions),
+                                     jnp.asarray(self._dispatch_idx()),
+                                     jnp.asarray(live))
 
     def _burst_len(self, live_idx: list[int]) -> int:
         """Largest safe burst: no live slot may complete (or first-token) inside
@@ -429,20 +565,20 @@ class ServeEngine:
             toks[i, 0] = self.active[i]._last
             live[i] = True
         n = self._burst_len(live_idx)
+        bank = self._dispatch_bank()
+        idx = jnp.asarray(self._dispatch_idx())
         t0 = time.perf_counter()
         if n <= 1:
-            nxt, self.cache = self._decode(self.params, self.bank, self.cache,
+            nxt, self.cache = self._decode(self.params, bank, self.cache,
                                            jnp.asarray(toks),
                                            jnp.asarray(self.positions),
-                                           jnp.asarray(self.users),
-                                           jnp.asarray(live))
+                                           idx, jnp.asarray(live))
             trace = np.asarray(nxt)[None]                      # (1, slots)
         else:
-            trace, self.cache = self._decode_n(self.params, self.bank,
+            trace, self.cache = self._decode_n(self.params, bank,
                                                self.cache, jnp.asarray(toks),
                                                jnp.asarray(self.positions),
-                                               jnp.asarray(self.users),
-                                               jnp.asarray(live), n=n)
+                                               idx, jnp.asarray(live), n=n)
             trace = np.asarray(trace)                          # (n, slots)
         now = time.perf_counter()
         self.stats["decode_time"] += now - t0
@@ -465,8 +601,11 @@ class ServeEngine:
                 self.finished.append(req)
                 self.active[i] = None
                 self.positions[i] = 0
+                if self.store is not None:
+                    self.store.release(req.user)
         self.stats["ticks"] += trace.shape[0]
         self.stats["tokens"] += trace.shape[0] * len(live_idx)
+        self._sync_store_stats()
         return trace.shape[0] * len(live_idx)
 
     def run_until_idle(self, max_ticks: int = 10_000) -> None:
@@ -476,6 +615,19 @@ class ServeEngine:
             self.tick()
 
     # -- stats -------------------------------------------------------------
+    def _sync_store_stats(self) -> None:
+        """Mirror the adapter store's counters/gauges into ``engine.stats``."""
+        if self.store is None:
+            return
+        m = self.store.metrics()
+        self.stats["store_hits"] = m["hits"]
+        self.stats["store_misses"] = m["misses"]
+        self.stats["store_evictions"] = m["evictions"]
+        self.stats["store_hit_rate"] = m["hit_rate"]
+        self.stats["store_pinned"] = m["pinned"]
+        self.stats["store_resident_bytes"] = m["resident_bytes"]
+        self.stats["store_fetch_time"] = m["fetch_time"]
+
     def request_stats(self) -> list[dict]:
         """Per-completed-request latency metrics (seconds)."""
         return [{"rid": r.rid, "user": r.user, "prompt_len": len(r.prompt),
@@ -488,10 +640,14 @@ class ServeEngine:
         pt = self.stats["prefill_time"]
         reqs = self.request_stats()
         ttfts = [r["ttft"] for r in reqs if r["ttft"] is not None]
-        return {
+        self._sync_store_stats()
+        out = {
             "decode_tok_per_s": self.stats["tokens"] / dt if dt else 0.0,
             "prefill_tok_per_s": (self.stats["prefill_tokens"] / pt
                                   if pt else 0.0),
             "mean_ttft": float(np.mean(ttfts)) if ttfts else None,
             "completed": self.stats["completed"],
         }
+        if self.store is not None:
+            out["store"] = self.store.metrics()
+        return out

@@ -1,0 +1,441 @@
+"""Tiered adapter store: host tier + LRU device residency + clustering.
+
+Core invariants under test:
+- serving through an R-row resident cache (R << U) with mid-flight evictions
+  emits tokens *bit-identical* to the all-resident engine (f32 and int8);
+- pinned users (live/queued slots) are never evicted; admission waits rather
+  than deadlocking when every row is pinned;
+- task-similarity clusters share one resident row, and a member's own
+  ``install_adapters`` splits them off copy-on-write without perturbing the
+  other members;
+- ``publish_banks`` skips (legacy bank) or registers (store) users the engine
+  has never seen, and an `OffloadChannel.on_commit` hook pushes validated fits
+  straight into serving.
+"""
+import types
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.configs.base import ColaConfig
+from repro.core import gl
+from repro.core.channel import OffloadChannel
+from repro.core.merge import merge_adapter_pytrees
+from repro.kernels.multi_lora import dequant_rows, quant_rows
+from repro.models import model as M
+from repro.runtime.adapter_store import AdapterStore, _cosine
+from repro.runtime.serve_loop import (Request, ServeEngine, publish_banks,
+                                      stack_user_adapters)
+
+
+def _tiny():
+    cfg = registry.reduced_config("smollm-135m").replace(
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_head=16,
+        d_ff=128, vocab_size=128)
+    key = jax.random.PRNGKey(0)
+    return cfg, M.init(cfg, key), key
+
+
+_CC = ColaConfig(mode="lora", family="lowrank", taps="qv", rank=4)
+
+
+def _bank(cfg, key, seed, jitter=0.1):
+    ad = gl.init_adapters(cfg, _CC, jax.random.fold_in(key, seed))
+    return jax.tree.map(lambda a: a + jitter * jax.random.normal(
+        jax.random.fold_in(key, 1000 + seed), a.shape), ad)
+
+
+def _banks(cfg, key, n):
+    return [_bank(cfg, key, u) for u in range(n)]
+
+
+def _prompts(cfg, lens, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab_size, size=p) for p in lens]
+
+
+def _serve(eng, prompts, users, max_new=5):
+    reqs = [Request(rid=i, user=u, prompt=p, max_new=max_new)
+            for i, (u, p) in enumerate(zip(users, prompts))]
+    for r in reqs:
+        eng.submit(r)
+    eng.run_until_idle()
+    return [r.out for r in reqs]
+
+
+# ---------------------------------------------------------------------------
+# satellite: stack_user_adapters input validation
+# ---------------------------------------------------------------------------
+
+def test_stack_user_adapters_empty_raises():
+    with pytest.raises(ValueError, match="empty list"):
+        stack_user_adapters([])
+
+
+def test_stack_user_adapters_mismatched_structure_raises():
+    cfg, params, key = _tiny()
+    a0 = _bank(cfg, key, 0)
+    cc_r8 = ColaConfig(mode="lora", family="lowrank", taps="qv", rank=8)
+    a1 = gl.init_adapters(cfg, cc_r8, key)   # different rank -> shape mismatch
+    with pytest.raises(ValueError, match="user 1 adapter structure"):
+        stack_user_adapters([a0, a1])
+
+
+# ---------------------------------------------------------------------------
+# store unit tests (no engine)
+# ---------------------------------------------------------------------------
+
+def test_store_lru_eviction_order_and_counters():
+    cfg, params, key = _tiny()
+    st = AdapterStore.from_users(_banks(cfg, key, 4), resident=2)
+    assert st.ensure_resident([0])[0] == st.ensure_resident([0])[0]
+    st.ensure_resident([1])
+    assert st.counters["hits"] == 1 and st.counters["misses"] == 2
+    # 0 is least-recently-used; admitting 2 must evict 0, not 1
+    st.ensure_resident([2])
+    assert st.counters["evictions"] == 1
+    assert st.resident_index(0) is None
+    assert st.resident_index(1) is not None
+    # touching 1 then admitting 3 evicts 2
+    st.ensure_resident([1, 3])
+    assert st.resident_index(2) is None and st.resident_index(3) is not None
+    m = st.metrics()
+    assert m["resident_users"] == 2 and m["host_users"] == 4
+    assert 0.0 < m["hit_rate"] < 1.0
+    assert m["fetch_time"] > 0.0
+
+
+def test_store_resident_bytes_bounded_by_R():
+    cfg, params, key = _tiny()
+    banks = _banks(cfg, key, 16)
+    st = AdapterStore.from_users(banks, resident=2)
+    dense = stack_user_adapters(banks)
+    dense_bytes = sum(l.nbytes for l in jax.tree.leaves(dense))
+    assert st.resident_bytes() == dense_bytes * 2 // 16
+    # host tier is numpy, device tier bounded by R regardless of U
+    st2 = AdapterStore.from_users(banks, resident=2, store="int8")
+    assert st2.resident_bytes() < st.resident_bytes()
+
+
+def test_store_pinned_rows_never_evicted():
+    cfg, params, key = _tiny()
+    st = AdapterStore.from_users(_banks(cfg, key, 5), resident=2)
+    assert st.acquire(0)
+    row0 = st.ensure_resident([0])[0]
+    # churn through other users: user 0's row must survive every eviction
+    for u in (1, 2, 3, 4):
+        st.ensure_resident([u])
+        assert st.resident_index(0) == row0
+    # a second pin exhausts capacity: acquiring a third distinct user fails
+    assert st.acquire(1)
+    assert not st.acquire(2)
+    st.release(0)
+    assert st.acquire(2)
+    # refcounting: double-acquire needs double-release
+    assert st.acquire(2) and st.pinned_count() == 2
+    st.release(2)
+    assert st.pinned_count() == 2
+    st.release(2)
+    assert st.pinned_count() == 1
+
+
+def test_store_all_rows_pinned_raises_on_fetch():
+    cfg, params, key = _tiny()
+    st = AdapterStore.from_users(_banks(cfg, key, 3), resident=1)
+    assert st.acquire(0)
+    st.ensure_resident([0])
+    with pytest.raises(RuntimeError, match="pinned"):
+        st._fetch(("user", 1))
+
+
+def test_store_rejects_mismatched_registration():
+    cfg, params, key = _tiny()
+    st = AdapterStore.from_users(_banks(cfg, key, 2), resident=2)
+    cc_r8 = ColaConfig(mode="lora", family="lowrank", taps="qv", rank=8)
+    with pytest.raises(ValueError, match="store\\s+template"):
+        st.register(7, gl.init_adapters(cfg, cc_r8, key))
+
+
+# ---------------------------------------------------------------------------
+# residency churn: R << U serving is bit-identical to all-resident
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bank_store", ["f32", "int8"])
+def test_store_serving_bit_identical_under_churn(bank_store):
+    """U=12 users through R=4 resident rows and 3 slots: evictions happen
+    mid-flight (users repeat), yet per-request tokens match the all-resident
+    (R=U) engine bit-for-bit, and device adapter bytes are bounded by R."""
+    cfg, params, key = _tiny()
+    banks = _banks(cfg, key, 12)
+    prompts = _prompts(cfg, [5 + (i % 7) for i in range(24)])
+    users = [(5 * i) % 12 for i in range(24)]   # strided reuse -> churn
+
+    def run(**kw):
+        eng = ServeEngine(cfg, params, slots=3, max_len=64,
+                          user_adapters=banks, bank_store=bank_store, **kw)
+        return _serve(eng, prompts, users), eng
+
+    o_full, e_full = run()
+    o_store, e_store = run(resident_slots=4)
+    assert o_store == o_full
+    st = e_store.stats
+    assert st["store_evictions"] > 0 and st["store_misses"] > 0
+    assert st["store_hits"] + st["store_misses"] > 0
+    assert st["store_fetch_time"] > 0.0
+    # device-resident adapter bytes scale with R=4, not U=12
+    full_bytes = sum(l.nbytes for l in jax.tree.leaves(e_full.bank))
+    assert st["store_resident_bytes"] == full_bytes * 4 // 12
+    # every pin was released at completion
+    assert st["store_pinned"] == 0
+    assert e_store.throughput()["store"]["hit_rate"] >= 0.0
+
+
+def test_store_admission_waits_when_all_rows_pinned():
+    """R == slots and every queued request is a distinct user: admission must
+    stall (never evict a live user's row) and still drain the queue."""
+    cfg, params, key = _tiny()
+    banks = _banks(cfg, key, 6)
+    prompts = _prompts(cfg, [6] * 6)
+    eng = ServeEngine(cfg, params, slots=2, max_len=64, user_adapters=banks,
+                      resident_slots=2)
+    outs = _serve(eng, prompts, list(range(6)), max_new=4)
+    assert eng.stats["completed"] == 6
+    assert all(len(o) == 4 for o in outs)
+    # matches the all-resident engine despite the admission stalls
+    ref = ServeEngine(cfg, params, slots=2, max_len=64, user_adapters=banks)
+    assert outs == _serve(ref, prompts, list(range(6)), max_new=4)
+
+
+def test_store_reference_prefill_mode_matches_batched():
+    cfg, params, key = _tiny()
+    banks = _banks(cfg, key, 8)
+    prompts = _prompts(cfg, (1, 5, 9, 13))
+    users = [1, 7, 3, 1]
+    outs = {}
+    for mode in ("batched", "reference"):
+        eng = ServeEngine(cfg, params, slots=2, max_len=64,
+                          user_adapters=banks, resident_slots=3,
+                          prefill_mode=mode)
+        outs[mode] = _serve(eng, prompts, users)
+    assert outs["batched"] == outs["reference"]
+
+
+def test_store_burst_decode_bit_identical():
+    cfg, params, key = _tiny()
+    banks = _banks(cfg, key, 8)
+    prompts = _prompts(cfg, (5, 9, 13))
+    users = [0, 5, 0]
+    eng1 = ServeEngine(cfg, params, slots=3, max_len=64, user_adapters=banks,
+                       resident_slots=4)
+    eng8 = ServeEngine(cfg, params, slots=3, max_len=64, user_adapters=banks,
+                       resident_slots=4, decode_burst=8)
+    assert (_serve(eng1, prompts, users, max_new=17)
+            == _serve(eng8, prompts, users, max_new=17))
+
+
+# ---------------------------------------------------------------------------
+# task-similarity clustering + copy-on-write splits
+# ---------------------------------------------------------------------------
+
+def _clustered_setup(mode="shared"):
+    cfg, params, key = _tiny()
+    base = jax.tree.map(lambda a: a + 0.2, _bank(cfg, key, 0, jitter=0.0))
+    banks = [
+        base,                                      # users 0,1: one task
+        jax.tree.map(lambda a: a * 1.01, base),
+        _bank(cfg, key, 2, jitter=0.3),            # users 2,3: distinct tasks
+        _bank(cfg, key, 3, jitter=0.4),
+    ]
+    eng = ServeEngine(cfg, params, slots=2, max_len=64, user_adapters=banks,
+                      resident_slots=3, cluster_threshold=0.95,
+                      cluster_mode=mode)
+    return cfg, params, key, base, banks, eng
+
+
+@pytest.mark.parametrize("mode", ["shared", "merged"])
+def test_clustering_maps_similar_users_to_one_row(mode):
+    cfg, params, key, base, banks, eng = _clustered_setup(mode)
+    st = eng.store
+    cid = st.cluster_of(0)
+    assert cid is not None and st.cluster_of(1) == cid
+    assert st.cluster_of(2) is None and st.cluster_of(3) is None
+    p = _prompts(cfg, (7,))[0]
+    # cluster members share an adapter -> identical tokens, one resident row
+    o0, o1 = _serve(eng, [p, p], [0, 1])
+    assert o0 == o1
+    assert st.resident_index(0) == st.resident_index(1)
+    assert eng.stats["store_hits"] >= 1   # the second member's touch is a hit
+
+
+def test_cow_split_does_not_perturb_cluster_members():
+    cfg, params, key, base, banks, eng = _clustered_setup()
+    prompts = _prompts(cfg, (7,))
+    before0 = _serve(eng, prompts, [0])[0]
+    before1 = _serve(eng, prompts, [1])[0]
+    assert before0 == before1
+    # user 1 installs their own fit: COW split off the cluster
+    new = jax.tree.map(lambda a: a - 0.3, base)
+    assert eng.install_adapters(1, new, version=1)
+    assert eng.store.cluster_of(1) is None and eng.store.cluster_of(0) is not None
+    assert eng.store.counters["splits"] == 1
+    after0 = _serve(eng, prompts, [0])[0]
+    after1 = _serve(eng, prompts, [1])[0]
+    assert after0 == before0, "cluster member perturbed by peer's split"
+    assert after1 != before1, "split user still serving the cluster adapter"
+    # the split user's tokens now match a dedicated engine on the new bank
+    solo = ServeEngine(cfg, params, slots=1, max_len=64, user_adapters=[new])
+    assert after1 == _serve(solo, prompts, [0])[0]
+
+
+def test_merged_cluster_serves_member_mean():
+    cfg, params, key, base, banks, eng = _clustered_setup(mode="merged")
+    merged = merge_adapter_pytrees([banks[0], banks[1]])
+    solo = ServeEngine(cfg, params, slots=1, max_len=64, user_adapters=[merged])
+    prompts = _prompts(cfg, (7,))
+    assert _serve(eng, prompts, [0])[0] == _serve(solo, prompts, [0])[0]
+
+
+def test_merge_adapter_pytrees_units():
+    a = {"t": {"A": np.full((2, 2), 1.0, np.float32)}}
+    b = {"t": {"A": np.full((2, 2), 3.0, np.float32)}}
+    m = merge_adapter_pytrees([a, b])
+    np.testing.assert_allclose(m["t"]["A"], 2.0)
+    w = merge_adapter_pytrees([a, b], weights=[0.75, 0.25])
+    np.testing.assert_allclose(w["t"]["A"], 1.5)
+    with pytest.raises(ValueError, match="at least one"):
+        merge_adapter_pytrees([])
+    with pytest.raises(ValueError, match="structures differ"):
+        merge_adapter_pytrees([a, {"t": {"B": np.zeros((2, 2), np.float32)}}])
+    with pytest.raises(ValueError, match="shapes differ"):
+        merge_adapter_pytrees([a, {"t": {"A": np.zeros((2, 3), np.float32)}}])
+
+
+def test_cosine_zero_norm_convention():
+    z = np.zeros(3)
+    v = np.ones(3)
+    assert _cosine(z, z) == 1.0 and _cosine(z, v) == 0.0
+    assert _cosine(v, v) == pytest.approx(1.0)
+
+
+def test_dequant_rows_roundtrip():
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(4, 8)), jnp.float32)
+    q, s = quant_rows(x)
+    back = dequant_rows(q, s)
+    np.testing.assert_allclose(np.asarray(back), np.asarray(x),
+                               atol=float(jnp.max(s)) + 1e-6)
+
+
+# ---------------------------------------------------------------------------
+# publish_banks / channel interop
+# ---------------------------------------------------------------------------
+
+def _fake_channel(user, version, adapters):
+    return types.SimpleNamespace(user=user, version=version, adapters=adapters)
+
+
+def test_publish_banks_skips_out_of_range_users_legacy():
+    """Satellite: a channel whose user id is outside the dense bank must be
+    skipped and counted, not crash with IndexError."""
+    cfg, params, key = _tiny()
+    banks = _banks(cfg, key, 2)
+    eng = ServeEngine(cfg, params, slots=2, max_len=32, user_adapters=banks)
+    good = jax.tree.map(lambda a: a + 0.1, banks[0])
+    chans = [_fake_channel(5, 3, good),       # out of range -> skipped
+             _fake_channel(-1, 3, good),      # negative -> skipped
+             _fake_channel(1, 3, good)]       # in range -> installed
+    assert publish_banks(eng, chans) == 1
+    assert eng.stats["bank_unknown_user"] == 2
+    assert eng.stats["bank_installs"] == 1
+    assert eng.bank_versions.tolist() == [0, 3]
+
+
+def test_publish_banks_registers_unknown_users_into_store():
+    cfg, params, key = _tiny()
+    banks = _banks(cfg, key, 2)
+    eng = ServeEngine(cfg, params, slots=2, max_len=64, user_adapters=banks,
+                      resident_slots=2)
+    # user 7 was never part of the engine's construction
+    r = Request(rid=0, user=7, prompt=np.arange(5) % cfg.vocab_size, max_new=3)
+    eng.submit(r)
+    assert r.status.startswith("rejected: unknown user")
+    newcomer = _bank(cfg, key, 7)
+    assert publish_banks(eng, [_fake_channel(7, 0, newcomer)]) == 1
+    assert eng.store.knows(7) and eng.store.version(7) == 0
+    # ...and is now servable, matching a dedicated engine on the same bank
+    out = _serve(eng, _prompts(cfg, (6,)), [7])[0]
+    solo = ServeEngine(cfg, params, slots=1, max_len=64,
+                       user_adapters=[newcomer])
+    assert out == _serve(solo, _prompts(cfg, (6,)), [0])[0]
+    # a later version bump installs; a replay is rejected
+    assert publish_banks(eng, [_fake_channel(7, 2, newcomer)]) == 1
+    assert publish_banks(eng, [_fake_channel(7, 2, newcomer)]) == 0
+
+
+def test_store_install_rejects_nonfinite_and_stale():
+    cfg, params, key = _tiny()
+    banks = _banks(cfg, key, 2)
+    eng = ServeEngine(cfg, params, slots=2, max_len=64, user_adapters=banks,
+                      resident_slots=2)
+    poisoned = jax.tree.map(lambda a: a * np.nan, banks[0])
+    assert not eng.install_adapters(0, poisoned, version=1)
+    assert not eng.install_adapters(0, banks[0], version=0)   # stale
+    assert eng.stats["bank_rejected"] == 2
+    cc_r8 = ColaConfig(mode="lora", family="lowrank", taps="qv", rank=8)
+    assert not eng.install_adapters(0, gl.init_adapters(cfg, cc_r8, key), 5)
+    assert eng.stats["bank_rejected"] == 3
+
+
+class _BankOffloader:
+    """Duck-typed Offloader whose bank is a real engine-shaped adapter pytree;
+    every fit nudges each leaf (so commits are validated version bumps)."""
+
+    def __init__(self, adapters):
+        self.adapters = adapters
+        self.opt_state = {}
+        self.buffers: dict[str, list] = {}
+        self._pushes = 0
+
+    @property
+    def ready(self):
+        return bool(self.buffers)
+
+    def push(self, data):
+        self.buffers.setdefault("t", []).append(data)
+        self._pushes += 1
+
+    def maybe_fit(self):
+        if not self.ready:
+            return None
+        self.adapters = jax.tree.map(lambda a: a + 0.01, self.adapters)
+        self.buffers.clear()
+        return self.adapters
+
+
+def test_channel_on_commit_pushes_into_serving():
+    """The push-based publication path: a channel's validated commit lands in
+    the engine's host tier via on_commit, no publish_banks sweep needed."""
+    cfg, params, key = _tiny()
+    banks = _banks(cfg, key, 1)
+    eng = ServeEngine(cfg, params, slots=1, max_len=64, user_adapters=banks,
+                      resident_slots=1)
+    seen = []
+
+    def commit(user, version, adapters):
+        seen.append((user, version))
+        assert eng.install_adapters(user, adapters, version)
+
+    ch = OffloadChannel(_BankOffloader(banks[0]), user=0, on_commit=commit)
+    ch.push({"t": (np.ones(4, np.float32), np.ones(4, np.float32))})
+    committed = ch.fit_round()
+    assert committed is not None
+    assert seen == [(0, 1)]
+    assert eng.store.version(0) == 1
+    assert eng.stats["bank_installs"] == 1
+    # the pushed bank is what the engine now serves with
+    out = _serve(eng, _prompts(cfg, (6,)), [0])[0]
+    solo = ServeEngine(cfg, params, slots=1, max_len=64,
+                       user_adapters=[committed])
+    assert out == _serve(solo, _prompts(cfg, (6,)), [0])[0]
