@@ -12,6 +12,10 @@ Perf trajectory: ``--baseline`` writes ``BENCH_serve.json`` at the repo root
 (decode/prefill tokens/sec, burst on and off); ``--check`` diffs a fresh run
 against the committed baseline (non-blocking CI job; see
 benchmarks/perf_baseline.py).
+
+``--chunked-sweep`` runs the chunked-prefill + paged-KV acceptance sweep:
+decode tok/s while a long prefill drains (chunked vs whole-prompt) and
+allocated cache bytes vs slot count (paged pool vs dense horizon).
 """
 from __future__ import annotations
 
@@ -182,6 +186,123 @@ def store_sweep(report):
     assert r["evictions"] > 0, "acceptance trace must exercise eviction"
 
 
+def bench_interference(chunk=None, prompt_long=1024, slots=4, seed=0,
+                       steady_ticks=30):
+    """Decode throughput with a long-prompt prefill draining concurrently.
+
+    ``slots - 1`` victim slots decode continuously; after a steady-state
+    measurement a ``prompt_long`` request is submitted and decode throughput
+    is re-measured until its prefill completes. ``chunk=None`` runs the
+    legacy whole-prompt prefill (decode stalls for the full prompt);
+    ``chunk=C`` runs chunked prefill over the paged KV layout (one C-token
+    chunk per tick, decode interleaved). Returns steady/drain decode tok/s
+    and the worst per-tick stall seen in each phase."""
+    cfg = bench_cfg("smollm-135m")
+    max_len = prompt_long + 64
+    params = M.init(cfg, jax.random.PRNGKey(seed))
+    kw = {}
+    if chunk is not None:
+        kw = dict(prefill_chunk=chunk, kv_layout="paged", kv_block=16)
+    eng = ServeEngine(cfg, params, slots=slots, max_len=max_len, **kw)
+    rng = np.random.default_rng(seed)
+    victims = [Request(rid=i, user=0,
+                       prompt=rng.integers(0, cfg.vocab_size, size=16),
+                       max_new=max_len - 24) for i in range(slots - 1)]
+    for r in victims:
+        eng.submit(r)
+    while any(r.t_first is None for r in victims):
+        eng.tick()
+
+    def long_req(rid):
+        return Request(rid=rid, user=0,
+                       prompt=rng.integers(0, cfg.vocab_size,
+                                           size=prompt_long), max_new=1)
+
+    # warmup: compile the long-prompt prefill/chunk path off the clock
+    warm = long_req(100)
+    eng.submit(warm)
+    while not warm.done:
+        eng.tick()
+
+    def phase(stop):
+        d0, t0, gaps = eng.stats["decode_tokens"], time.perf_counter(), []
+        while not stop(len(gaps)):
+            t1 = time.perf_counter()
+            eng.tick()
+            gaps.append(time.perf_counter() - t1)
+        dt = time.perf_counter() - t0
+        return ((eng.stats["decode_tokens"] - d0) / dt, max(gaps), len(gaps))
+
+    base, base_stall, _ = phase(lambda n: n >= steady_ticks)
+    probe = long_req(101)
+    eng.submit(probe)
+    drain, drain_stall, drain_ticks = phase(lambda n: probe.t_first is not None)
+    return {"base": base, "drain": drain, "ratio": drain / max(base, 1e-9),
+            "base_stall": base_stall, "drain_stall": drain_stall,
+            "drain_ticks": drain_ticks}
+
+
+def _layout_bytes(cfg, slots, max_len, kv_blocks, kv_block=16):
+    """Allocated decode-cache bytes per layout, from cache_specs shapes (no
+    device allocation — slots=4096 dense would be GBs)."""
+    def total(specs):
+        return sum(int(np.prod(s.shape)) * np.dtype(s.dtype).itemsize
+                   for s in jax.tree.leaves(specs))
+    dense = total(M.cache_specs(cfg, slots, max_len))
+    ring_len = None
+    if M.layer_plan(cfg)[0] == "pairs":
+        ring_len = (cfg.local_window or max_len) + kv_block - 1
+    paged = total(M.cache_specs(cfg, slots, max_len, kv_layout="paged",
+                                kv_blocks=kv_blocks, kv_block=kv_block,
+                                ring_len=ring_len))
+    paged += slots * (-(-max_len // kv_block)) * 4      # block table
+    return dense, paged
+
+
+def chunked_sweep(report):
+    """Chunked prefill + paged KV acceptance sweep (ISSUE 9)."""
+    report("# Chunked prefill: decode tok/s while a 1024-token prefill drains")
+    report(fmt_row("mode", "steady_tok_s", "drain_tok_s", "retained",
+                   "steady_stall_ms", "drain_stall_ms", "drain_ticks"))
+    rows = {}
+    for label, chunk in (("unchunked", None), ("chunk=16", 16),
+                         ("chunk=32", 32)):
+        r = bench_interference(chunk=chunk)
+        rows[label] = r
+        report(fmt_row(label, f"{r['base']:.1f}", f"{r['drain']:.1f}",
+                       f"{r['ratio']:.2f}", f"{r['base_stall'] * 1e3:.1f}",
+                       f"{r['drain_stall'] * 1e3:.1f}", r["drain_ticks"]))
+    un, ch = rows["unchunked"], rows["chunk=16"]
+    report(f"# unchunked stalls decode for the whole prompt "
+           f"({un['drain_stall'] * 1e3:.0f}ms, one tick); chunked bounds the "
+           f"stall at one chunk round ({ch['drain_stall'] * 1e3:.0f}ms) "
+           f"(target: drain tok/s within 15% of steady on accelerator-class "
+           f"decode batches; CPU ticks are dispatch-bound so the retained "
+           f"fraction here is dominated by the extra chunk dispatch)")
+    assert ch["ratio"] > 2 * un["ratio"], \
+        "chunked prefill must retain more decode throughput under drain"
+    assert un["drain_stall"] > 3 * ch["drain_stall"], \
+        "chunked prefill must bound the decode stall below the full-prompt stall"
+
+    report("")
+    report("# Paged KV: allocated cache bytes vs slot count (max_len=256, "
+           "pool fixed at 1024x16 positions = tokens in flight, not horizon)")
+    report(fmt_row("slots", "dense_MB", "paged_MB", "dense/paged"))
+    cfg = bench_cfg("smollm-135m")
+    sizes = {}
+    for slots in (8, 64, 512, 4096):
+        dense, paged = _layout_bytes(cfg, slots, max_len=256, kv_blocks=1024)
+        sizes[slots] = (dense, paged)
+        report(fmt_row(slots, f"{dense / 2**20:.2f}", f"{paged / 2**20:.2f}",
+                       f"{dense / paged:.1f}x"))
+    # dense scales with slots * max_len; paged only grows by the block table
+    assert sizes[4096][0] == 512 * sizes[8][0]
+    assert sizes[4096][1] < 2 * sizes[8][1]
+    report(f"# 4096 slots: dense {sizes[4096][0] / 2**20:.0f}MB vs paged "
+           f"{sizes[4096][1] / 2**20:.1f}MB with a 16k-position pool "
+           f"({sizes[4096][0] / sizes[4096][1]:.0f}x)")
+
+
 def run(report):
     report("# FTaaS serving: batched vs single-row prefill "
            "(TTFT from submit, all requests submitted up front)")
@@ -243,6 +364,14 @@ def collect() -> list[dict]:
                             "users=256,resident=32,slots=8,int8",
                             tokens_per_s=st8["decode_tok_per_s"],
                             hit_rate=st8["hit_rate"]))
+    # chunked prefill + paged KV: steady paged decode and decode-under-drain
+    itf = bench_interference(chunk=16)
+    entries.append(pb.entry("serve_paged_decode",
+                            "slots=4,chunk=16,kv_block=16,steady",
+                            tokens_per_s=itf["base"]))
+    entries.append(pb.entry("serve_paged_decode",
+                            "slots=4,chunk=16,kv_block=16,drain1024",
+                            tokens_per_s=itf["drain"]))
     return entries
 
 
@@ -252,6 +381,9 @@ def main(argv=None) -> int:
     argv = list(sys.argv[1:] if argv is None else argv)
     if "--store-sweep" in argv:
         store_sweep(lambda *a: print(*a, flush=True))
+        return 0
+    if "--chunked-sweep" in argv:
+        chunked_sweep(lambda *a: print(*a, flush=True))
         return 0
     return pb.run_cli(argv, collect=collect, baseline_name="BENCH_serve.json",
                       meta={"suite": "serve_throughput",

@@ -42,6 +42,16 @@ def supported(q, k_cache, v_cache) -> bool:
     return Sk % _block_k(Sk) == 0
 
 
+def supported_paged(q, k_pool, v_pool, block_table) -> bool:
+    B, Sq, H, Dh = q.shape
+    _, bs, K, _ = k_pool.shape
+    if Sq != 1 or Dh not in (64, 128, 256):
+        return False
+    if H % K != 0:
+        return False
+    return bs % 8 == 0
+
+
 def _block_k(sk: int) -> int:
     for b in (512, 256, 128, 64, 32, 16, 8):
         if sk % b == 0 and b <= sk:
@@ -141,4 +151,75 @@ def decode_attention(q: Array, k_cache: Array, v_cache: Array,
         out_shape=jax.ShapeDtypeStruct((B, K, G, Dh), q.dtype),
         interpret=interpret,
     )(positions.astype(jnp.int32), live.astype(jnp.int32), qg, k_cache, v_cache)
+    return o.reshape(B, 1, H, Dh)
+
+
+def _kernel_paged(pos_ref, live_ref, table_ref, q_ref, k_ref, v_ref, o_ref,
+                  acc_ref, m_ref, l_ref, *, scale, window, softcap, block_k,
+                  n_groups):
+    # Identical online-softmax math to the dense kernel: grid axis 2 walks the
+    # row's block *table* slots in position order, so ki * block_k is still the
+    # absolute kv position of the tile — only the BlockSpec index maps differ
+    # (the tile is fetched from pool row table[b, ki] instead of (b, ki)).
+    _kernel(pos_ref, live_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref,
+            l_ref, scale=scale, window=window, softcap=softcap,
+            block_k=block_k, n_groups=n_groups)
+
+
+def decode_attention_paged(q: Array, k_pool: Array, v_pool: Array,
+                           positions: Array, block_table: Array, *,
+                           live: Array | None = None,
+                           window: int | None = None,
+                           softcap: float | None = None,
+                           scale: float | None = None,
+                           interpret: bool = False) -> Array:
+    """Fused single-query decode attention over a paged KV pool.
+
+    q: (B, 1, H, Dh); pools: (n_blocks, block, K, Dh) shared across slots;
+    block_table: (B, max_blocks) int32 mapping (slot, position // block) to a
+    pool block id. The table rides in as a third scalar-prefetch operand (next
+    to positions/live): the k/v BlockSpec index maps dereference
+    ``table[b, ki]`` so each grid step DMAs its tile straight out of the pool
+    — no gathered dense copy of the cache ever exists. Blocks past a row's
+    position (including unallocated table entries, which point at block 0) are
+    skipped by the same ``pl.when`` position test as the dense kernel.
+    Oracle: ``ref.sdpa_decode_paged``.
+    """
+    B, Sq, H, Dh = q.shape
+    _, bs, K, _ = k_pool.shape
+    nb = block_table.shape[1]
+    G = H // K
+    if scale is None:
+        scale = Dh ** -0.5
+    if live is None:
+        live = jnp.ones((B,), bool)
+    qg = q.reshape(B, K, G, Dh)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(B, K, nb),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, Dh),
+                         lambda b, h, ki, pos, live, tbl: (b, h, 0, 0)),
+            pl.BlockSpec((1, bs, 1, Dh),
+                         lambda b, h, ki, pos, live, tbl: (tbl[b, ki], 0, h, 0)),
+            pl.BlockSpec((1, bs, 1, Dh),
+                         lambda b, h, ki, pos, live, tbl: (tbl[b, ki], 0, h, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, G, Dh), lambda b, h, ki, pos, live, tbl: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, Dh), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+        ],
+    )
+    o = pl.pallas_call(
+        functools.partial(_kernel_paged, scale=scale, window=window,
+                          softcap=softcap, block_k=bs, n_groups=G),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, K, G, Dh), q.dtype),
+        interpret=interpret,
+    )(positions.astype(jnp.int32), live.astype(jnp.int32),
+      block_table.astype(jnp.int32), qg, k_pool, v_pool)
     return o.reshape(B, 1, H, Dh)

@@ -57,9 +57,10 @@ def sdpa(q: Array, k: Array, v: Array, *, q_positions: Array, kv_positions: Arra
 def sdpa_decode(q: Array, k_cache: Array, v_cache: Array, positions: Array, *,
                 live: Array | None = None, window: int | None = None,
                 softcap: float | None = None, scale: float | None = None) -> Array:
-    """Single-query decode attention against a slot KV cache (serving hot
-    path): per-row positions, per-slot live mask. Routes to the fused
-    flash-decode kernel off-CPU; see ref.sdpa_decode for semantics."""
+    """Incremental attention against a dense slot KV cache (serving hot path):
+    per-row positions, per-slot live mask; Sq == 1 is the decode tick, Sq > 1 a
+    prefill chunk. Routes the single-query case to the fused flash-decode
+    kernel off-CPU; see ref.sdpa_decode for semantics."""
     if _BACKEND != "ref":
         from repro.kernels import decode_attention as da
         if da.supported(q, k_cache, v_cache):
@@ -69,6 +70,40 @@ def sdpa_decode(q: Array, k_cache: Array, v_cache: Array, positions: Array, *,
                                        interpret=_interpret())
     return ref.sdpa_decode(q, k_cache, v_cache, positions, live=live,
                            window=window, softcap=softcap, scale=scale)
+
+
+def sdpa_decode_paged(q: Array, k_pool: Array, v_pool: Array, positions: Array,
+                      block_table: Array, *, live: Array | None = None,
+                      window: int | None = None, softcap: float | None = None,
+                      scale: float | None = None) -> Array:
+    """Paged-KV incremental attention: the cache is a shared block pool
+    (n_blocks, block, K, Dh) addressed through a per-slot ``block_table``
+    (B, max_blocks). The fused kernel scalar-prefetches the table and reads
+    pool blocks directly (no gather); the ref path gathers a dense per-slot
+    view. See ref.sdpa_decode_paged for semantics."""
+    if _BACKEND != "ref":
+        from repro.kernels import decode_attention as da
+        if da.supported_paged(q, k_pool, v_pool, block_table):
+            return da.decode_attention_paged(q, k_pool, v_pool, positions,
+                                             block_table, live=live,
+                                             window=window, softcap=softcap,
+                                             scale=scale,
+                                             interpret=_interpret())
+    return ref.sdpa_decode_paged(q, k_pool, v_pool, positions, block_table,
+                                 live=live, window=window, softcap=softcap,
+                                 scale=scale)
+
+
+def sdpa_decode_ring(q: Array, k_ring: Array, v_ring: Array, positions: Array,
+                     *, live: Array | None = None, window: int | None = None,
+                     softcap: float | None = None,
+                     scale: float | None = None) -> Array:
+    """Rolling-window (ring) incremental attention for local-window layers
+    under the paged layout. The ring is window-sized, so there is no long
+    cache to stream — the position-ordered gather + dense math in
+    ref.sdpa_decode_ring is the implementation on every backend."""
+    return ref.sdpa_decode_ring(q, k_ring, v_ring, positions, live=live,
+                                window=window, softcap=softcap, scale=scale)
 
 
 # ---------------------------------------------------------------------------

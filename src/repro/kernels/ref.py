@@ -107,18 +107,90 @@ def _sdpa_dense(q: Array, k: Array, v: Array, *, q_positions: Array,
 def sdpa_decode(q: Array, k_cache: Array, v_cache: Array, positions: Array, *,
                 live: Array | None = None, window: int | None = None,
                 softcap: float | None = None, scale: float | None = None) -> Array:
-    """Single-query decode attention against a slot KV cache (fused-kernel
-    oracle). q: (B, 1, H, Dh); caches: (B, Smax, K, Dh); positions: (B,) each
-    row's current position (cache valid at kv_pos <= position). ``live``: (B,)
-    bool — non-live (dead/padding) slots return zeros, so their output is
-    deterministic rather than garbage attention over a stale cache.
+    """Incremental attention against a slot KV cache (fused-kernel oracle).
+    q: (B, Sq, H, Dh) — Sq == 1 is the decode tick, Sq > 1 one chunk of a
+    chunked prefill; caches: (B, Smax, K, Dh); positions: (B,) each row's
+    *first* query position (query i sits at positions + i, and the cache is
+    valid at kv_pos <= that query's position). ``live``: (B,) bool — non-live
+    (dead/padding) slots return zeros, so their output is deterministic rather
+    than garbage attention over a stale cache.
     """
-    B, Smax = k_cache.shape[0], k_cache.shape[1]
+    B, Sq = q.shape[0], q.shape[1]
+    Smax = k_cache.shape[1]
+    q_pos = positions.astype(jnp.int32)[:, None] + jnp.arange(Sq, dtype=jnp.int32)[None]
     kv_pos = jnp.broadcast_to(jnp.arange(Smax, dtype=jnp.int32)[None],
                               (B, Smax))
-    o = sdpa(q, k_cache, v_cache, q_positions=positions[:, None],
+    o = sdpa(q, k_cache, v_cache, q_positions=q_pos,
              kv_positions=kv_pos, causal=True, window=window, softcap=softcap,
              scale=scale)
+    if live is not None:
+        o = jnp.where(live[:, None, None, None], o, 0.0).astype(o.dtype)
+    return o
+
+
+def sdpa_decode_paged(q: Array, k_pool: Array, v_pool: Array, positions: Array,
+                      block_table: Array, *, live: Array | None = None,
+                      window: int | None = None, softcap: float | None = None,
+                      scale: float | None = None) -> Array:
+    """Paged-KV incremental attention (fused paged-kernel oracle).
+
+    q: (B, Sq, H, Dh); pools: (n_blocks, block, K, Dh) shared across slots;
+    block_table: (B, max_blocks) int32, position p of row b lives in pool block
+    ``table[b, p // block]`` at offset ``p % block``. The oracle gathers each
+    row's blocks back into a dense (B, max_blocks * block, K, Dh) view and
+    defers to ``sdpa_decode`` — unallocated table entries point at block 0,
+    whose (foreign) contents sit at kv positions beyond the row's allocated
+    prefix and are position-masked. Bit-identical to the dense layout: the
+    gathered prefix holds the same values and the masked tail contributes
+    exact zeros either way.
+    """
+    kd = k_pool[block_table]        # (B, max_blocks, block, K, Dh)
+    vd = v_pool[block_table]
+    B, nb, bs = kd.shape[0], kd.shape[1], kd.shape[2]
+    kd = kd.reshape(B, nb * bs, *kd.shape[3:])
+    vd = vd.reshape(B, nb * bs, *vd.shape[3:])
+    return sdpa_decode(q, kd, vd, positions, live=live, window=window,
+                       softcap=softcap, scale=scale)
+
+
+def sdpa_decode_ring(q: Array, k_ring: Array, v_ring: Array, positions: Array,
+                     *, live: Array | None = None, window: int | None = None,
+                     softcap: float | None = None,
+                     scale: float | None = None) -> Array:
+    """Rolling-window (ring) incremental attention — the pairs local-window
+    layers under the paged layout keep only the last W_ring positions, with
+    position p stored at ring index ``p % W_ring``.
+
+    q: (B, Sq, H, Dh); rings: (B, W_ring, K, Dh); positions: (B,) first query
+    position. The last *written* position is P = positions + Sq - 1 (the
+    caller writes the chunk before attending). Ring index r holds the largest
+    position ≡ r (mod W_ring) that is <= P; the gather below reorders the ring
+    by ascending absolute position so the softmax/weighted-sum accumulate in
+    the same order as the dense layout (bit-identity), assigning each entry
+    its absolute kv position:
+
+    - wrapped (P >= W_ring - 1): ordered index j maps to ring slot
+      (P + 1 + j) % W_ring holding position P - W_ring + 1 + j.
+    - not wrapped: ring slot j holds position j; slots beyond P are unwritten
+      (or hold a padded chunk's future-position garbage) and their assigned
+      position falls outside [qp - window, qp] — masked either way.
+
+    Requires W_ring >= window + Sq - 1 (every query's full local window is
+    still resident) — the cache-spec layer picks W_ring accordingly.
+    """
+    B, Sq = q.shape[0], q.shape[1]
+    w_ring = k_ring.shape[1]
+    pos = positions.astype(jnp.int32)
+    last = pos + Sq - 1                                     # (B,) == P
+    j = jnp.arange(w_ring, dtype=jnp.int32)[None]           # (1, W)
+    wrapped = (last >= w_ring - 1)[:, None]
+    ring_idx = jnp.where(wrapped, (last[:, None] + 1 + j) % w_ring, j)
+    kv_pos = jnp.where(wrapped, last[:, None] - w_ring + 1 + j, j)
+    kd = jnp.take_along_axis(k_ring, ring_idx[:, :, None, None], axis=1)
+    vd = jnp.take_along_axis(v_ring, ring_idx[:, :, None, None], axis=1)
+    q_pos = pos[:, None] + jnp.arange(Sq, dtype=jnp.int32)[None]
+    o = sdpa(q, kd, vd, q_positions=q_pos, kv_positions=kv_pos, causal=True,
+             window=window, softcap=softcap, scale=scale)
     if live is not None:
         o = jnp.where(live[:, None, None, None], o, 0.0).astype(o.dtype)
     return o

@@ -90,29 +90,86 @@ def attention_decode(params: dict, x: Array, k_cache: Array, v_cache: Array,
                      rope_theta: float = 1e4, window: int | None = None,
                      softcap: float | None = None, qk_norm: bool = False,
                      tap_prefix: str = "attn", tap_ctx: tuple | None = None,
-                     live: Array | None = None) -> tuple[Array, Array, Array]:
-    """One-token decode step.
+                     live: Array | None = None,
+                     block_table: Array | None = None,
+                     ring: bool = False) -> tuple[Array, Array, Array]:
+    """Incremental step: write ``c`` new tokens into the cache, attend causally
+    against everything written so far. ``c == 1`` is the decode tick; ``c > 1``
+    is one chunk of a chunked prefill (Sarathi-style — the chunk attends to all
+    previous chunks through the cache, which full-sequence prefill cannot do).
 
-    x: (B, 1, d_model); k_cache/v_cache: (B, Smax, K, Dh); positions: (B,) current
-    write positions (number of tokens already in the cache for each row).
-    ``live``: optional (B,) slot mask — dead rows' attention output is zeroed
-    (their cache writes are reverted by the caller; see model._mask_cache_rows).
+    x: (B, c, d_model); positions: (B,) start position of the chunk per row
+    (= number of tokens already in the cache). Three cache layouts:
+
+    - dense (default): k/v_cache (B, Smax, K, Dh). Writes at positions
+      [pos, pos + c); out-of-range positions (padded chunk tails near the
+      horizon) are dropped, never clamped into earlier rows.
+    - paged (``block_table`` (B, max_blocks) given): k/v_cache is the shared
+      pool (n_blocks, block, K, Dh); position p lives in pool block
+      ``table[b, p // block]`` at offset ``p % block``. Non-live rows and
+      positions beyond the table map to block id n_blocks and are dropped at
+      the scatter (a shared pool has no per-slot rows to revert afterwards).
+    - ring (``ring=True``; pairs local-window layers under the paged layout):
+      k/v_cache (B, W_ring, K, Dh) holds only the last W_ring positions;
+      position p lives at ``p % W_ring``. Requires
+      W_ring >= window + c - 1 so a chunk's earliest query still sees its full
+      local window. Reads reorder the ring by ascending absolute position
+      (see ref.sdpa_decode_ring) to keep summation order — and hence bits —
+      identical to the dense layout.
+
+    ``live``: optional (B,) slot mask — dead rows' attention output is zeroed;
+    their dense/ring cache writes are reverted by the caller
+    (model._mask_cache_rows) while paged writes are index-dropped here.
     Returns (y, new_k_cache, new_v_cache).
     """
-    B, S1, _ = x.shape
-    assert S1 == 1
-    q, k, v = _project_qkv(params, x, positions[:, None], n_heads=n_heads,
+    B, c, _ = x.shape
+    pos2d = positions[:, None] + jnp.arange(c, dtype=jnp.int32)[None, :]
+    q, k, v = _project_qkv(params, x, pos2d, n_heads=n_heads,
                            n_kv=n_kv, d_head=d_head, rope_theta=rope_theta,
                            qk_norm=qk_norm, tap_prefix=tap_prefix, tap_ctx=tap_ctx)
 
-    # Scatter the new k/v into the cache at per-row positions (vmap over batch).
-    k_cache = jax.vmap(lambda c, n, p: jax.lax.dynamic_update_slice_in_dim(
-        c, n, p, axis=0))(k_cache, k, positions)
-    v_cache = jax.vmap(lambda c, n, p: jax.lax.dynamic_update_slice_in_dim(
-        c, n, p, axis=0))(v_cache, v, positions)
-
-    o = kernel_ops.sdpa_decode(q, k_cache, v_cache, positions, live=live,
-                               window=window, softcap=softcap)
-    o = o.reshape(B, 1, n_heads * d_head)
+    if block_table is not None:
+        n_blocks, bs = k_cache.shape[0], k_cache.shape[1]
+        blk = jnp.take_along_axis(block_table,
+                                  jnp.clip(pos2d // bs, 0,
+                                           block_table.shape[1] - 1), axis=1)
+        ok = pos2d < block_table.shape[1] * bs
+        if live is not None:
+            ok = ok & live[:, None]
+        blk = jnp.where(ok, blk, n_blocks)          # OOB block id -> dropped
+        off = pos2d % bs
+        k_cache = k_cache.at[blk, off].set(k, mode="drop")
+        v_cache = v_cache.at[blk, off].set(v, mode="drop")
+        o = kernel_ops.sdpa_decode_paged(q, k_cache, v_cache, positions,
+                                         block_table, live=live, window=window,
+                                         softcap=softcap)
+    elif ring:
+        w_ring = k_cache.shape[1]
+        b_idx = jnp.arange(B, dtype=jnp.int32)[:, None]
+        k_cache = k_cache.at[b_idx, pos2d % w_ring].set(k)
+        v_cache = v_cache.at[b_idx, pos2d % w_ring].set(v)
+        o = kernel_ops.sdpa_decode_ring(q, k_cache, v_cache, positions,
+                                        live=live, window=window,
+                                        softcap=softcap)
+    else:
+        if c == 1:
+            # keep the single-token decode write as a dynamic slice (the
+            # compiled serving decode path) — positions stay < Smax here.
+            k_cache = jax.vmap(lambda cc, n, p: jax.lax.dynamic_update_slice_in_dim(
+                cc, n, p, axis=0))(k_cache, k, positions)
+            v_cache = jax.vmap(lambda cc, n, p: jax.lax.dynamic_update_slice_in_dim(
+                cc, n, p, axis=0))(v_cache, v, positions)
+        else:
+            # chunk writes scatter per position so a padded chunk tail that
+            # crosses the horizon is *dropped* (dynamic_update_slice would
+            # clamp the window back over real KV).
+            Smax = k_cache.shape[1]
+            b_idx = jnp.arange(B, dtype=jnp.int32)[:, None]
+            tgt = jnp.where(pos2d < Smax, pos2d, Smax)
+            k_cache = k_cache.at[b_idx, tgt].set(k, mode="drop")
+            v_cache = v_cache.at[b_idx, tgt].set(v, mode="drop")
+        o = kernel_ops.sdpa_decode(q, k_cache, v_cache, positions, live=live,
+                                   window=window, softcap=softcap)
+    o = o.reshape(B, c, n_heads * d_head)
     y = L.dense(params["o"], o, tap=f"{tap_prefix}.o", tap_ctx=tap_ctx)
     return y, k_cache, v_cache

@@ -117,14 +117,16 @@ def ssm_block(cfg: ModelConfig, params: dict, x: Array, *, tap_prefix: str,
 def attn_block_decode(cfg: ModelConfig, params: dict, x: Array, k_cache: Array,
                       v_cache: Array, positions: Array, *, window: int | None,
                       tap_prefix: str, tap_ctx: tuple | None,
-                      live: Array | None = None):
+                      live: Array | None = None,
+                      block_table: Array | None = None, ring: bool = False):
     h = _norm(cfg, params["ln1"], x)
     h, k_cache, v_cache = A.attention_decode(
         params["attn"], h, k_cache, v_cache, positions,
         n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, d_head=cfg.d_head,
         rope_theta=cfg.rope_theta, window=window,
         softcap=cfg.attn_softcap or None, qk_norm=cfg.qk_norm,
-        tap_prefix=f"{tap_prefix}.attn", tap_ctx=tap_ctx, live=live)
+        tap_prefix=f"{tap_prefix}.attn", tap_ctx=tap_ctx, live=live,
+        block_table=block_table, ring=ring)
     if cfg.post_norm:
         h = _norm(cfg, params["post_ln1"], h)
     x = x + h
@@ -143,7 +145,19 @@ def attn_block_decode(cfg: ModelConfig, params: dict, x: Array, k_cache: Array,
 
 def ssm_block_decode(cfg: ModelConfig, params: dict, x: Array, conv_state: Array,
                      ssm_state: Array, *, tap_prefix: str, tap_ctx: tuple | None):
+    """Incremental ssm step. x: (B, 1, d) runs the single-token recurrence;
+    x: (B, c, d) runs one prefill chunk through the full-sequence block with
+    chunk-boundary (conv, ssd) state carried in and out — exact-length
+    semantics, no padding ever touches the recurrent state."""
     h = _norm(cfg, params["ln"], x)
+    if x.shape[1] > 1:
+        y, st = S.ssm_block(
+            params["ssm"], h, d_model=cfg.d_model, expand=cfg.ssm_expand,
+            headdim=cfg.ssm_headdim, state=cfg.ssm_state, norm_eps=cfg.norm_eps,
+            chunk=cfg.ssd_chunk, tap_prefix=f"{tap_prefix}.ssm",
+            tap_ctx=tap_ctx, init_state=ssm_state, conv_state=conv_state,
+            return_state=True)
+        return x + y, st["conv"], st["ssm"]
     y, conv_state, ssm_state = S.ssm_decode_step(
         params["ssm"], h, conv_state, ssm_state, d_model=cfg.d_model,
         expand=cfg.ssm_expand, headdim=cfg.ssm_headdim, state=cfg.ssm_state,

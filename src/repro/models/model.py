@@ -457,15 +457,49 @@ def has_recurrent_state(cfg: ModelConfig) -> bool:
     return plan[0] == "hybrid" or (plan[0] == "uniform" and plan[1] == "ssm")
 
 
-def cache_specs(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+def cache_specs(cfg: ModelConfig, batch: int, max_len: int, *,
+                kv_layout: str = "dense", kv_blocks: int | None = None,
+                kv_block: int = 16, ring_len: int | None = None) -> dict:
+    """Decode-cache leaf specs.
+
+    ``kv_layout="dense"``: every attention stack gets a (n, batch, max_len, K,
+    Dh) slot cache — HBM scales with the horizon.
+
+    ``kv_layout="paged"``: attention KV lives in a shared block pool
+    (n, kv_blocks, kv_block, K, Dh) addressed through a per-slot block table
+    (owned by the serving engine's ``runtime.kv_pager.BlockPager`` and passed
+    to ``decode_step(block_table=)``) — HBM scales with kv_blocks, and
+    ``max_len`` becomes a virtual horizon (it only sizes the table). The pairs
+    plan's local-window stack instead gets a per-slot rolling ring cache
+    (half, batch, ring_len, K, Dh); ``ring_len`` must be >= local_window +
+    chunk - 1 for the chunk widths the caller will use. Recurrent (ssm/conv)
+    state is O(1) per slot and is identical in both layouts.
+    """
     cdt = canonical_dtype(cfg.compute_dtype)
     plan = layer_plan(cfg)
+    assert kv_layout in ("dense", "paged"), kv_layout
+    if kv_layout == "paged" and kv_blocks is None:
+        kv_blocks = batch * (-(-max_len // kv_block))   # dense-equivalent pool
 
     def kv(n):
+        if kv_layout == "paged":
+            return {"k": jax.ShapeDtypeStruct(
+                        (n, kv_blocks, kv_block, cfg.n_kv_heads, cfg.d_head), cdt),
+                    "v": jax.ShapeDtypeStruct(
+                        (n, kv_blocks, kv_block, cfg.n_kv_heads, cfg.d_head), cdt)}
         return {"k": jax.ShapeDtypeStruct(
                     (n, batch, max_len, cfg.n_kv_heads, cfg.d_head), cdt),
                 "v": jax.ShapeDtypeStruct(
                     (n, batch, max_len, cfg.n_kv_heads, cfg.d_head), cdt)}
+
+    def kv_ring(n):
+        if kv_layout != "paged":
+            return kv(n)
+        w = ring_len if ring_len is not None else (cfg.local_window or max_len)
+        return {"k": jax.ShapeDtypeStruct(
+                    (n, batch, w, cfg.n_kv_heads, cfg.d_head), cdt),
+                "v": jax.ShapeDtypeStruct(
+                    (n, batch, w, cfg.n_kv_heads, cfg.d_head), cdt)}
 
     def ssm_states(n):
         sh = S.ssm_state_shapes(cfg.d_model, batch, expand=cfg.ssm_expand,
@@ -479,18 +513,21 @@ def cache_specs(cfg: ModelConfig, batch: int, max_len: int) -> dict:
     if plan[0] == "uniform" and plan[1] == "ssm":
         return {"layers": ssm_states(cfg.n_layers)}
     if plan[0] == "pairs":
-        # NOTE: the local stack (a) only ever *reads* a window of the cache; a
-        # rolling window-sized cache is a decode-memory optimisation kept for
-        # the perf loop (needs position-aware RoPE bookkeeping). Baseline uses
-        # the full-length cache for correctness.
-        return {"layers_a": kv(plan[1]), "layers_b": kv(plan[1])}
+        # The local stack (a) only ever *reads* a window of the cache: under
+        # the paged layout it keeps a rolling ring of the last ring_len
+        # positions instead of full rows (see attention.attention_decode).
+        return {"layers_a": kv_ring(plan[1]), "layers_b": kv(plan[1])}
     n_seg = len(layer_plan(cfg)[1])
     return {"layers": ssm_states(cfg.n_layers), "shared": kv(n_seg)}
 
 
-def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, *,
+               kv_layout: str = "dense", kv_blocks: int | None = None,
+               kv_block: int = 16, ring_len: int | None = None) -> dict:
     return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
-                        cache_specs(cfg, batch, max_len))
+                        cache_specs(cfg, batch, max_len, kv_layout=kv_layout,
+                                    kv_blocks=kv_blocks, kv_block=kv_block,
+                                    ring_len=ring_len))
 
 
 def _mask_cache_rows(live, new, old):
@@ -508,7 +545,8 @@ def _mask_cache_rows(live, new, old):
 
 
 def _decode_scan(cfg, stack_params, x, cache, positions, spec, adapters, deltas,
-                 *, kind: str, prefix: str, window, live=None):
+                 *, kind: str, prefix: str, window, live=None,
+                 block_table=None):
     ad = _subvars(adapters, prefix)
     de = _subvars(deltas, prefix)
 
@@ -519,7 +557,12 @@ def _decode_scan(cfg, stack_params, x, cache, positions, spec, adapters, deltas,
         if kind == "attn":
             x, k, v = B.attn_block_decode(cfg, lp, x, c["k"], c["v"], positions,
                                           window=window, tap_prefix=prefix,
-                                          tap_ctx=tap_ctx, live=live)
+                                          tap_ctx=tap_ctx, live=live,
+                                          block_table=block_table)
+            if block_table is not None:
+                # paged pool leaves have no slot axis to revert: dead rows'
+                # writes were already dropped at the scatter (OOB block ids).
+                return x, {"k": k, "v": v}
             return x, _mask_cache_rows(live, {"k": k, "v": v}, c)
         x, conv, st = B.ssm_block_decode(cfg, lp, x, c["conv"], c["ssm"],
                                          tap_prefix=prefix, tap_ctx=tap_ctx)
@@ -531,13 +574,21 @@ def _decode_scan(cfg, stack_params, x, cache, positions, spec, adapters, deltas,
 
 def decode_step(cfg: ModelConfig, params: dict, batch: dict, cache: dict,
                 spec: ColaSpec | None = None, cola_vars: dict | None = None,
-                *, live: Array | None = None):
-    """One decode step. batch: {"tokens": (B,1[,CB]) | "embeds": (B,1,d),
-    "positions": (B,)}. Returns (logits, new_cache).
+                *, live: Array | None = None, block_table: Array | None = None):
+    """One incremental step. batch: {"tokens": (B,c[,CB]) | "embeds": (B,c,d),
+    "positions": (B,)} — c == 1 is the decode tick; c > 1 runs one chunk of a
+    chunked prefill (the chunk attends to all earlier chunks through the
+    cache, and recurrent state is carried across the boundary exactly).
+    Returns (logits (B, c, V), new_cache).
 
     ``live``: optional (B,) bool mask; cache rows of non-live slots are left
     untouched (their logits are still computed but carry no meaning). Serving
     engines must pass this whenever a decode batch contains dead/padding slots.
+
+    ``block_table``: (B, max_blocks) int32 — selects the paged KV layout (the
+    cache must come from ``init_cache(kv_layout="paged")``): attention KV is
+    addressed through the table into shared block pools, and the pairs plan's
+    local stack through per-slot rolling ring caches.
     """
     adapters = (cola_vars or {}).get("adapters", {})
     deltas = (cola_vars or {}).get("deltas", {})
@@ -548,7 +599,8 @@ def decode_step(cfg: ModelConfig, params: dict, batch: dict, cache: dict,
     if plan[0] == "uniform":
         x, nc = _decode_scan(cfg, params["layers"], x, cache["layers"],
                              positions, spec, adapters, deltas, kind=plan[1],
-                             prefix="layers", window=None, live=live)
+                             prefix="layers", window=None, live=live,
+                             block_table=block_table)
         new_cache["layers"] = nc
     elif plan[0] == "pairs":
         def body(x, xs):
@@ -557,12 +609,15 @@ def decode_step(cfg: ModelConfig, params: dict, batch: dict, cache: dict,
             x, ka, va = B.attn_block_decode(
                 cfg, lpa, x, ca["k"], ca["v"], positions,
                 window=cfg.local_window, tap_prefix="layers_a",
-                tap_ctx=(spec, ada, dea, aux), live=live)
+                tap_ctx=(spec, ada, dea, aux), live=live,
+                ring=block_table is not None)
             x, kb, vb = B.attn_block_decode(
                 cfg, lpb, x, cb["k"], cb["v"], positions, window=None,
-                tap_prefix="layers_b", tap_ctx=(spec, adb, deb, aux), live=live)
-            return x, (_mask_cache_rows(live, {"k": ka, "v": va}, ca),
-                       _mask_cache_rows(live, {"k": kb, "v": vb}, cb))
+                tap_prefix="layers_b", tap_ctx=(spec, adb, deb, aux), live=live,
+                block_table=block_table)
+            nb = ({"k": kb, "v": vb} if block_table is not None
+                  else _mask_cache_rows(live, {"k": kb, "v": vb}, cb))
+            return x, (_mask_cache_rows(live, {"k": ka, "v": va}, ca), nb)
 
         ad_a, de_a = _subvars(adapters, "layers_a"), _subvars(deltas, "layers_a")
         ad_b, de_b = _subvars(adapters, "layers_b"), _subvars(deltas, "layers_b")
@@ -584,10 +639,13 @@ def decode_step(cfg: ModelConfig, params: dict, batch: dict, cache: dict,
                 cfg, params["shared"], x, cache["shared"]["k"][i],
                 cache["shared"]["v"][i], positions, window=None,
                 tap_prefix="shared", tap_ctx=(spec, sh_ad, sh_de, aux),
-                live=live)
-            masked = _mask_cache_rows(
-                live, {"k": k, "v": v},
-                {"k": cache["shared"]["k"][i], "v": cache["shared"]["v"][i]})
+                live=live, block_table=block_table)
+            if block_table is not None:
+                masked = {"k": k, "v": v}   # paged: dead-row writes dropped
+            else:
+                masked = _mask_cache_rows(
+                    live, {"k": k, "v": v},
+                    {"k": cache["shared"]["k"][i], "v": cache["shared"]["v"][i]})
             shared_k.append(masked["k"])
             shared_v.append(masked["v"])
             seg_params = _tree_slice(params["layers"], start, start + ln)

@@ -74,8 +74,18 @@ def ssm_block(params: dict, u: Array, *, d_model: int, expand: int = 2,
               chunk: int = 128, tap_prefix: str = "ssm",
               tap_ctx: tuple | None = None,
               init_state: Array | None = None,
+              conv_state: Array | None = None,
               return_state: bool = False):
-    """Full-sequence Mamba2 block. u: (B, S, d_model)."""
+    """Full-sequence Mamba2 block. u: (B, S, d_model).
+
+    ``conv_state``/``init_state`` carry chunk-boundary state for chunked
+    prefill: passing the (B, W-1, C) raw-input tail and (B, H, P, N) SSD state
+    of the previous chunk makes this call compute exactly the continuation —
+    the conv output of every position sums the same W raw inputs in the same
+    order as one full-sequence call (zero conv_state reproduces the
+    zero-padded start bit-for-bit), and the SSD scan folds the carried state
+    through ``init_state``.
+    """
     dims = ssm_dims(d_model, expand=expand, headdim=headdim, state=state)
     di, H, P, N = dims["d_inner"], dims["nheads"], dims["headdim"], dims["state"]
     Bsz, S, _ = u.shape
@@ -84,12 +94,23 @@ def ssm_block(params: dict, u: Array, *, d_model: int, expand: int = 2,
     z, x, Bm, Cm, dt = _split_proj(zxbcdt, di, N, H)
     xbc_raw = jnp.concatenate([x, Bm, Cm], axis=-1)
     W = params["conv_w"].shape[0]
-    # conv tail = raw inputs of the last (W-1) positions, padded if S < W-1;
-    # this seeds the decode conv state after a prefill.
-    tail = xbc_raw[:, -(W - 1):]
-    if tail.shape[1] < W - 1:
-        tail = jnp.pad(tail, ((0, 0), (W - 1 - tail.shape[1], 0), (0, 0)))
-    xbc = jax.nn.silu(_causal_conv(xbc_raw, params["conv_w"], params["conv_b"]))
+    if conv_state is not None:
+        # chunk continuation: convolve over [prev tail ; this chunk] and keep
+        # only this chunk's outputs; the new tail comes from the extended
+        # history (exact even when S < W - 1).
+        hist = jnp.concatenate([conv_state.astype(xbc_raw.dtype), xbc_raw],
+                               axis=1)                  # (B, W-1+S, C)
+        tail = hist[:, -(W - 1):]
+        xbc = jax.nn.silu(_causal_conv(hist, params["conv_w"],
+                                       params["conv_b"])[:, W - 1:])
+    else:
+        # conv tail = raw inputs of the last (W-1) positions, padded if
+        # S < W-1; this seeds the decode conv state after a prefill.
+        tail = xbc_raw[:, -(W - 1):]
+        if tail.shape[1] < W - 1:
+            tail = jnp.pad(tail, ((0, 0), (W - 1 - tail.shape[1], 0), (0, 0)))
+        xbc = jax.nn.silu(_causal_conv(xbc_raw, params["conv_w"],
+                                       params["conv_b"]))
     x, Bm, Cm = xbc[..., :di], xbc[..., di:di + N], xbc[..., di + N:]
     dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])   # (B,S,H)
     a = -jnp.exp(params["A_log"])

@@ -23,6 +23,29 @@ slot — fixed here and guarded by tests/test_serving.py).
 The token-by-token single-row path is kept as a reference implementation
 (``prefill_mode="reference"``) for the batched==reference equivalence tests.
 
+Chunked prefill (``prefill_chunk=C``): instead of one monolithic prefill
+forward at admission, each prompt is split into C-token chunks and exactly one
+chunk round runs per engine tick, interleaved with the live decode batch
+(Sarathi-style). A long prompt then stalls decode by at most one chunk of
+model work per tick instead of a full prompt forward. Chunks run through
+``model_lib.decode_step`` with ``c > 1`` tokens per row: non-recurrent rows go
+as one width-C padded group (per-row ``lens`` gathers each row's last real
+logit), recurrent (ssm/hybrid) rows are grouped by exact chunk width so no
+padding ever touches conv/ssd state, which is carried across chunk boundaries
+exactly. The first generated token is emitted straight from the final chunk's
+logits (and, unchunked, from the prefill logits via ``prefill(lengths=)``) —
+no decode tick is spent re-deriving it.
+
+Paged KV (``kv_layout="paged"``, requires chunked prefill): the dense
+(slots, max_len) slot cache is replaced by a shared block pool plus a per-slot
+block table (``runtime.kv_pager.BlockPager``). Blocks are allocated on demand
+as positions are written and freed at retirement, so KV HBM scales with
+*tokens held*, not slots x horizon — ``max_len`` becomes a virtual horizon
+that only sizes the block table. Admission reserves each request's worst-case
+block count up front, so a mid-flight allocation can never run the pool dry.
+gemma2-style local-window stacks keep a per-slot ring cache of
+``local_window + C - 1`` positions instead of pool blocks.
+
 Adapter banks come in two flavours: the dense device-resident stack
 (``stack_user_adapters``; U bounded by HBM) and, with ``resident_slots=R``,
 the tiered ``AdapterStore`` (runtime/adapter_store.py): every user lives in a
@@ -47,6 +70,7 @@ from repro.core import gl
 from repro.core import taps as taps_lib
 from repro.models import model as model_lib
 from repro.runtime.adapter_store import AdapterStore
+from repro.runtime.kv_pager import BlockPager
 
 Array = jax.Array
 
@@ -178,14 +202,37 @@ class ServeEngine:
                  bank_store: str = "f32", decode_burst: int = 1,
                  resident_slots: int | None = None,
                  cluster_threshold: float | None = None,
-                 cluster_mode: str = "shared"):
+                 cluster_mode: str = "shared",
+                 prefill_chunk: int | None = None,
+                 kv_layout: str = "dense", kv_block: int = 16,
+                 kv_blocks: int | None = None,
+                 max_prompt: int | None = None):
         assert prefill_mode in ("batched", "reference"), prefill_mode
         assert bank_store in ("f32", "int8"), bank_store
+        assert kv_layout in ("dense", "paged"), kv_layout
+        if prefill_chunk is not None:
+            assert prefill_chunk >= 1, prefill_chunk
+            assert prefill_mode == "batched", (
+                "chunked prefill requires prefill_mode='batched' (the "
+                "reference mode exists to oracle the unchunked path)")
+        if kv_layout == "paged":
+            assert prefill_chunk is not None, (
+                "kv_layout='paged' requires prefill_chunk: the monolithic "
+                "prefill scatters a dense cache (scatter_prefill_cache), "
+                "only the chunked path writes through the block table")
         self.cfg = cfg
         self.params = params
         self.slots = slots
         self.max_len = max_len
         self.prefill_mode = prefill_mode
+        self.prefill_chunk = prefill_chunk
+        self.kv_layout = kv_layout
+        self.kv_block = kv_block
+        # a prompt occupies [0, P) and one decode position must remain below
+        # the horizon, so max_prompt can never exceed max_len - 1
+        self.max_prompt = (int(max_prompt) if max_prompt is not None
+                           else max_len - 1)
+        assert 1 <= self.max_prompt <= max_len - 1, self.max_prompt
         self.admit_batch = admit_batch if admit_batch is not None else slots
         self.bank_store = bank_store
         # Burst decoding: fuse up to ``decode_burst`` decode ticks into one
@@ -198,7 +245,21 @@ class ServeEngine:
         self.active: list[Request | None] = [None] * slots
         self.positions = np.zeros(slots, np.int32)
         self.users = np.zeros(slots, np.int32)
-        self.cache = model_lib.init_cache(cfg, slots, max_len)
+        self.pager: BlockPager | None = None
+        ring_len = None
+        if kv_layout == "paged":
+            n_blocks = (kv_blocks if kv_blocks is not None
+                        else slots * (-(-max_len // kv_block)))
+            self.pager = BlockPager(n_blocks, kv_block, slots, max_len)
+            kv_blocks = n_blocks
+            if model_lib.layer_plan(cfg)[0] == "pairs":
+                # local-window ring: must hold the window plus a full chunk's
+                # in-flight writes (see models/attention.attention_decode)
+                ring_len = (cfg.local_window or max_len) + prefill_chunk - 1
+        self.cache = model_lib.init_cache(cfg, slots, max_len,
+                                          kv_layout=kv_layout,
+                                          kv_blocks=kv_blocks,
+                                          kv_block=kv_block, ring_len=ring_len)
         self.spec = None
         self.bank = None
         self.store: AdapterStore | None = None
@@ -230,11 +291,16 @@ class ServeEngine:
         self._decode = jax.jit(self._decode_fn)
         self._decode_n = jax.jit(self._decode_burst_fn, static_argnames=("n",))
         self._prefill = jax.jit(self._prefill_fn)
-        self.stats = {"ticks": 0, "tokens": 0, "completed": 0, "admitted": 0,
+        self._chunk = jax.jit(self._chunk_fn)
+        self.stats = {"ticks": 0, "tokens": 0, "decode_tokens": 0,
+                      "completed": 0, "admitted": 0,
                       "prefill_calls": 0, "prefill_tokens": 0,
+                      "prefill_chunks": 0, "chunk_rounds": 0,
                       "decode_time": 0.0, "prefill_time": 0.0,
                       "rejected": 0, "bank_installs": 0, "bank_rejected": 0,
                       "bank_unknown_user": 0,
+                      "kv_blocks_in_use": 0, "kv_blocks_peak": 0,
+                      "kv_allocs": 0, "kv_frees": 0, "kv_reserve_failures": 0,
                       "store_hits": 0, "store_misses": 0, "store_evictions": 0,
                       "store_hit_rate": 0.0, "store_pinned": 0,
                       "store_resident_bytes": 0, "store_fetch_time": 0.0}
@@ -258,16 +324,17 @@ class ServeEngine:
             vars_[tap] = entry
         return {"adapters": vars_}
 
-    def _decode_fn(self, params, bank, cache, tokens, positions, users, live):
+    def _decode_fn(self, params, bank, cache, table, tokens, positions, users,
+                   live):
         batch = {"tokens": tokens, "positions": positions}
         logits, cache = model_lib.decode_step(
             self.cfg, params, batch, cache, self.spec,
-            self._cola_vars(bank, users), live=live)
+            self._cola_vars(bank, users), live=live, block_table=table)
         next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
         return next_tok, cache
 
-    def _decode_burst_fn(self, params, bank, cache, tokens, positions, users,
-                         live, *, n: int):
+    def _decode_burst_fn(self, params, bank, cache, table, tokens, positions,
+                         users, live, *, n: int):
         """``n`` chained decode ticks in one jitted lax.scan: each step feeds
         its argmax token back as the next step's input and advances live rows'
         positions. Returns the (n, slots) token trace plus the final cache.
@@ -278,7 +345,7 @@ class ServeEngine:
             batch = {"tokens": toks, "positions": pos}
             logits, cache = model_lib.decode_step(
                 self.cfg, params, batch, cache, self.spec,
-                self._cola_vars(bank, users), live=live)
+                self._cola_vars(bank, users), live=live, block_table=table)
             nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
             toks = jnp.where(live, nxt, toks[:, 0])[:, None]
             pos = pos + live.astype(pos.dtype)
@@ -287,13 +354,33 @@ class ServeEngine:
             body, (tokens, positions, cache), None, length=n)
         return trace, cache
 
-    def _prefill_fn(self, params, bank, cache, tokens, users, slot_ids):
-        """Run a padded (J, P) prompt batch through full-sequence prefill and
-        scatter each row's KV/state into its slot. Padding rows carry an
-        out-of-range slot id and are dropped by the scatter."""
-        _, pre = model_lib.prefill(self.cfg, params, {"tokens": tokens},
-                                   self.spec, self._cola_vars(bank, users))
-        return model_lib.scatter_prefill_cache(cache, pre, slot_ids)
+    def _prefill_fn(self, params, bank, cache, tokens, users, slot_ids,
+                    lengths):
+        """Run a padded (J, P) prompt batch through full-sequence prefill,
+        scatter each row's KV/state into its slot and return each row's first
+        generated token (argmax of the logits at its true last prompt
+        position, gathered by ``lengths``). Padding rows carry an out-of-range
+        slot id and are dropped by the scatter."""
+        logits, pre = model_lib.prefill(self.cfg, params, {"tokens": tokens},
+                                        self.spec, self._cola_vars(bank, users),
+                                        lengths=lengths)
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_tok, model_lib.scatter_prefill_cache(cache, pre, slot_ids)
+
+    def _chunk_fn(self, params, bank, cache, table, tokens, positions, users,
+                  live, lens):
+        """One prefill chunk round: a (slots, width) token batch through the
+        multi-token decode step. ``lens[i]`` is row i's real chunk length
+        (<= width; the rest is padding whose cache writes are masked/dropped);
+        the returned token is each row's argmax at its last real position —
+        meaningful only for rows whose prompt just completed."""
+        batch = {"tokens": tokens, "positions": positions}
+        logits, cache = model_lib.decode_step(
+            self.cfg, params, batch, cache, self.spec,
+            self._cola_vars(bank, users), live=live, block_table=table)
+        rows = jnp.arange(tokens.shape[0])
+        last = logits[rows, jnp.clip(lens - 1, 0)]
+        return jnp.argmax(last, axis=-1).astype(jnp.int32), cache
 
     # -- dispatch routing --------------------------------------------------
     # With a tiered store the jitted decode/prefill receive the R-row resident
@@ -310,9 +397,10 @@ class ServeEngine:
         if len(req.prompt) == 0:
             return "empty prompt"
         # a prompt occupies positions [0, P); at least one decode tick must fit
-        # below the cache horizon (completion triggers at max_len - 1)
-        if len(req.prompt) > self.max_len - 1:
-            return f"prompt length {len(req.prompt)} > max {self.max_len - 1}"
+        # below the cache horizon, so max_prompt is capped at max_len - 1
+        if len(req.prompt) > self.max_prompt:
+            return (f"prompt length {len(req.prompt)} > max_prompt "
+                    f"{self.max_prompt} (horizon max_len={self.max_len})")
         if req.max_new <= 0:
             return f"max_new must be positive, got {req.max_new}"
         if self.store is not None:
@@ -433,29 +521,53 @@ class ServeEngine:
                     self.res_idx[i] = row
         return True
 
+    def _reserve_len(self, req: Request) -> int:
+        """Worst-case positions ``req`` can ever write on its slot: the
+        chunk-padded prompt (non-recurrent chunk rounds write width-C tails)
+        or the decode horizon, whichever is larger, clipped to max_len.
+        Reserving this at admission means mid-flight ``ensure`` never fails."""
+        P = len(req.prompt)
+        C = self.prefill_chunk or P
+        padded = -(-P // C) * C
+        return min(self.max_len, max(padded, P + req.max_new))
+
+    def _table(self):
+        return jnp.asarray(self.pager.table) if self.pager is not None else None
+
     def _admit(self) -> None:
-        """Admit up to ``admit_batch`` waiting requests into free slots and
-        prefill their prompts. The batched path pads all admitted prompts to
-        one (J, P) batch and runs a single prefill forward; the reference path
-        feeds tokens one by one through the (live-masked) decode step."""
+        """Admit up to ``admit_batch`` waiting requests into free slots. The
+        unchunked batched path pads all admitted prompts to one (J, P) batch
+        and runs a single prefill forward; the reference path feeds tokens one
+        by one through the (live-masked) decode step; the chunked path only
+        assigns slots (and reserves KV blocks) — chunk rounds in subsequent
+        ticks stream the prompts in. All paths emit each request's first
+        generated token from the prompt's own logits, never a decode tick."""
         admitted: list[int] = []
         now = time.perf_counter()
         for i in range(self.slots):
             if len(admitted) >= self.admit_batch or not self.queue:
                 break
-            if self.active[i] is None:
-                if (self.store is not None
-                        and not self.store.acquire(self.queue[0].user)):
-                    # every resident row is pinned by a distinct live user:
-                    # admission waits (FIFO) until a request completes.
-                    break
-                req = self.queue.pop(0)
-                req.t_admit = now
-                self.active[i] = req
-                self.users[i] = req.user
-                self.positions[i] = len(req.prompt) - 1
-                req._last = int(req.prompt[-1])
-                admitted.append(i)
+            if self.active[i] is not None:
+                continue
+            req = self.queue[0]
+            if (self.pager is not None
+                    and not self.pager.reserve(i, self._reserve_len(req))):
+                # pool pressure: admission waits (FIFO) until retirements
+                # return enough blocks to back this request's worst case.
+                break
+            if self.store is not None and not self.store.acquire(req.user):
+                # every resident row is pinned by a distinct live user:
+                # admission waits (FIFO) until a request completes.
+                if self.pager is not None:
+                    self.pager.release(i)   # roll back the reservation
+                break
+            self.queue.pop(0)
+            req.t_admit = now
+            req._consumed = 0
+            self.active[i] = req
+            self.users[i] = req.user
+            self.positions[i] = 0
+            admitted.append(i)
         if not admitted:
             return
         if self.store is not None:
@@ -466,23 +578,26 @@ class ServeEngine:
             for k, i in enumerate(admitted):
                 self.res_idx[i] = res_rows[k]
         self.stats["admitted"] += len(admitted)
-        # the last prompt token is fed through the first decode tick (it
-        # produces the first output token); prefill covers prompt[:-1].
-        rows = [(i, np.asarray(self.active[i].prompt[:-1], np.int32))
+        if self.prefill_chunk is not None:
+            return   # chunk rounds (one per tick) do the prefill work
+        rows = [(i, np.asarray(self.active[i].prompt, np.int32))
                 for i in admitted]
-        rows = [(i, feed) for i, feed in rows if len(feed)]
-        if not rows:
-            return
         t0 = time.perf_counter()
         if self.prefill_mode == "reference":
             for i, feed in rows:
+                nxt = 0
                 for t, tok in enumerate(feed):
-                    self._feed(i, int(tok), t)
+                    nxt = self._feed(i, int(tok), t)
+                self._first_token(i, nxt, time.perf_counter())
         else:
             self._prefill_batch(rows)
         self.stats["prefill_time"] += time.perf_counter() - t0
         self.stats["prefill_calls"] += 1
         self.stats["prefill_tokens"] += sum(len(f) for _, f in rows)
+        now = time.perf_counter()
+        for i, _ in rows:
+            if self.active[i] is not None:
+                self._maybe_finish(i, now)
 
     def _prefill_batch(self, rows: list[tuple[int, np.ndarray]]) -> None:
         if self._recurrent:
@@ -491,11 +606,14 @@ class ServeEngine:
             # each row at its exact length (still one forward per prompt
             # instead of one decode step per token).
             for i, feed in rows:
-                self.cache = self._prefill(
+                nxt, self.cache = self._prefill(
                     self.params, self._dispatch_bank(), self.cache,
                     jnp.asarray(feed[None, :]),
                     jnp.asarray(self._dispatch_idx()[i:i + 1]),
-                    jnp.asarray(np.array([i], np.int32)))
+                    jnp.asarray(np.array([i], np.int32)),
+                    jnp.asarray(np.array([len(feed)], np.int32)))
+                self._first_token(i, int(np.asarray(nxt)[0]),
+                                  time.perf_counter())
             return
         # attention KV: pad-token garbage beyond a row's true length is safe
         # (decode overwrites position p before attending; causality hides > p),
@@ -505,31 +623,132 @@ class ServeEngine:
         j = _bucket(len(rows), floor=1)
         toks = np.zeros((j, pmax), np.int32)
         users = np.zeros((j,), np.int32)
+        lengths = np.ones((j,), np.int32)
         # padding rows point at slot id == slots (out of range -> dropped)
         slot_ids = np.full((j,), self.slots, np.int32)
         for r, (i, feed) in enumerate(rows):
             toks[r, :len(feed)] = feed
             users[r] = self._dispatch_idx()[i]
             slot_ids[r] = i
-        self.cache = self._prefill(self.params, self._dispatch_bank(),
-                                   self.cache, jnp.asarray(toks),
-                                   jnp.asarray(users), jnp.asarray(slot_ids))
+            lengths[r] = len(feed)
+        nxt, self.cache = self._prefill(self.params, self._dispatch_bank(),
+                                        self.cache, jnp.asarray(toks),
+                                        jnp.asarray(users),
+                                        jnp.asarray(slot_ids),
+                                        jnp.asarray(lengths))
+        nxt = np.asarray(nxt)
+        now = time.perf_counter()
+        for r, (i, _) in enumerate(rows):
+            self._first_token(i, int(nxt[r]), now)
 
-    def _feed(self, slot: int, token: int, pos: int) -> None:
+    def _feed(self, slot: int, token: int, pos: int) -> int:
         """Reference single-row prefill step: decode one prompt token into one
-        slot's cache. The live mask confines the cache write to ``slot`` (the
-        unmasked version corrupted position 0 of every other live slot)."""
+        slot's cache and return the argmax token (the last feed's return is
+        the request's first generated token). The live mask confines the cache
+        write to ``slot`` (the unmasked version corrupted position 0 of every
+        other live slot)."""
         toks = np.zeros((self.slots, 1), np.int32)
         toks[slot, 0] = token
         positions = np.zeros((self.slots,), np.int32)
         positions[slot] = pos
         live = np.zeros((self.slots,), bool)
         live[slot] = True
-        _, self.cache = self._decode(self.params, self._dispatch_bank(),
-                                     self.cache, jnp.asarray(toks),
-                                     jnp.asarray(positions),
-                                     jnp.asarray(self._dispatch_idx()),
-                                     jnp.asarray(live))
+        nxt, self.cache = self._decode(self.params, self._dispatch_bank(),
+                                       self.cache, None, jnp.asarray(toks),
+                                       jnp.asarray(positions),
+                                       jnp.asarray(self._dispatch_idx()),
+                                       jnp.asarray(live))
+        return int(np.asarray(nxt)[slot])
+
+    def _first_token(self, i: int, tok: int, now: float) -> None:
+        """Record a request's first generated token (emitted from its prompt's
+        own logits at prefill/chunk completion) and arm the slot for decode:
+        the next decode tick feeds this token at position P."""
+        req = self.active[i]
+        req.t_first = now
+        req.out.append(tok)
+        req._last = tok
+        req._consumed = len(req.prompt)   # prompt fully in cache: decode-live
+        self.positions[i] = len(req.prompt)
+        self.stats["tokens"] += 1
+
+    def _maybe_finish(self, i: int, now: float) -> None:
+        req = self.active[i]
+        if (len(req.out) >= req.max_new
+                or self.positions[i] >= self.max_len - 1):
+            self._retire(i, now)
+
+    def _retire(self, i: int, now: float) -> None:
+        req = self.active[i]
+        req.done = True
+        req.status = "done"
+        req.t_done = now
+        self.stats["completed"] += 1
+        self.finished.append(req)
+        self.active[i] = None
+        self.positions[i] = 0
+        if self.pager is not None:
+            self.pager.release(i)
+        if self.store is not None:
+            self.store.release(req.user)
+
+    def _chunk_round(self) -> list[int]:
+        """Advance every mid-prefill slot by one chunk (Sarathi interleave:
+        exactly one round per tick, so a long prompt costs each decode tick at
+        most one chunk of extra model work). Non-recurrent rows run as one
+        width-C padded group; recurrent rows are grouped by exact chunk width
+        so padding never touches conv/ssd state. Returns the slots that were
+        mid-prefill at entry."""
+        pend = [i for i, r in enumerate(self.active)
+                if r is not None and r._consumed < len(r.prompt)]
+        if not pend:
+            return pend
+        C = self.prefill_chunk
+        t0 = time.perf_counter()
+        if self._recurrent:
+            groups: dict[int, list[int]] = {}
+            for i in pend:
+                req = self.active[i]
+                groups.setdefault(min(C, len(req.prompt) - req._consumed),
+                                  []).append(i)
+            todo = sorted(groups.items())
+        else:
+            todo = [(C, pend)]
+        for width, idx_list in todo:
+            toks = np.zeros((self.slots, width), np.int32)
+            lens = np.ones((self.slots,), np.int32)
+            live = np.zeros((self.slots,), bool)
+            pos = np.zeros((self.slots,), np.int32)
+            for i in idx_list:
+                req = self.active[i]
+                c = min(width, len(req.prompt) - req._consumed)
+                toks[i, :c] = req.prompt[req._consumed:req._consumed + c]
+                lens[i] = c
+                live[i] = True
+                pos[i] = req._consumed
+                if self.pager is not None:
+                    ok = self.pager.ensure(
+                        i, min(req._consumed + width - 1, self.max_len - 1))
+                    assert ok, "admission reservation must cover the prompt"
+            nxt, self.cache = self._chunk(
+                self.params, self._dispatch_bank(), self.cache, self._table(),
+                jnp.asarray(toks), jnp.asarray(pos),
+                jnp.asarray(self._dispatch_idx()), jnp.asarray(live),
+                jnp.asarray(lens))
+            nxt = np.asarray(nxt)
+            now = time.perf_counter()
+            for i in idx_list:
+                req = self.active[i]
+                c = min(width, len(req.prompt) - req._consumed)
+                req._consumed += c
+                self.stats["prefill_tokens"] += c
+                if req._consumed >= len(req.prompt):
+                    self._first_token(i, int(nxt[i]), now)
+                    self._maybe_finish(i, now)
+            self.stats["prefill_chunks"] += len(idx_list)
+        self.stats["chunk_rounds"] += 1
+        self.stats["prefill_time"] += time.perf_counter() - t0
+        return pend
 
     def _burst_len(self, live_idx: list[int]) -> int:
         """Largest safe burst: no live slot may complete (or first-token) inside
@@ -540,8 +759,6 @@ class ServeEngine:
         bound = self.decode_burst
         for i in live_idx:
             req = self.active[i]
-            if not req.out:
-                return 1   # first output token: emit promptly (TTFT)
             remaining = min(req.max_new - len(req.out),
                             self.max_len - 1 - int(self.positions[i]))
             bound = min(bound, remaining)
@@ -553,30 +770,47 @@ class ServeEngine:
         return n
 
     def tick(self) -> int:
-        """One engine iteration: admit + decode one token for all live slots
-        (or a burst of tokens when ``decode_burst`` allows; see _burst_len)."""
+        """One engine iteration: admit, advance mid-prefill slots by one chunk
+        (chunked mode), then decode one token for every slot whose prompt is
+        fully in cache (or a burst when ``decode_burst`` allows; bursts are
+        capped to 1 while any slot is prefilling so the chunk interleave — and
+        with it decode latency — stays per-tick flat)."""
         self._admit()
-        live_idx = [i for i, r in enumerate(self.active) if r is not None]
+        prefilling = (self._chunk_round() if self.prefill_chunk is not None
+                      else [])
+        live_idx = [i for i, r in enumerate(self.active)
+                    if r is not None and r._consumed >= len(r.prompt)]
         if not live_idx:
+            if prefilling:
+                self.stats["ticks"] += 1
+            self._sync_store_stats()
+            self._sync_pager_stats()
             return 0
         toks = np.zeros((self.slots, 1), np.int32)
         live = np.zeros((self.slots,), bool)
         for i in live_idx:
             toks[i, 0] = self.active[i]._last
             live[i] = True
-        n = self._burst_len(live_idx)
+        n = 1 if prefilling else self._burst_len(live_idx)
+        if self.pager is not None:
+            for i in live_idx:
+                ok = self.pager.ensure(
+                    i, min(int(self.positions[i]) + n - 1, self.max_len - 1))
+                assert ok, "admission reservation must cover the horizon"
         bank = self._dispatch_bank()
         idx = jnp.asarray(self._dispatch_idx())
+        table = self._table()
         t0 = time.perf_counter()
         if n <= 1:
             nxt, self.cache = self._decode(self.params, bank, self.cache,
-                                           jnp.asarray(toks),
+                                           table, jnp.asarray(toks),
                                            jnp.asarray(self.positions),
                                            idx, jnp.asarray(live))
             trace = np.asarray(nxt)[None]                      # (1, slots)
         else:
             trace, self.cache = self._decode_n(self.params, bank,
-                                               self.cache, jnp.asarray(toks),
+                                               self.cache, table,
+                                               jnp.asarray(toks),
                                                jnp.asarray(self.positions),
                                                idx, jnp.asarray(live), n=n)
             trace = np.asarray(trace)                          # (n, slots)
@@ -586,26 +820,16 @@ class ServeEngine:
             for i in live_idx:
                 req = self.active[i]
                 tok = int(trace[step, i])
-                if not req.out:
-                    req.t_first = now
                 req.out.append(tok)
                 req._last = tok
                 self.positions[i] += 1
         for i in live_idx:
-            req = self.active[i]
-            if len(req.out) >= req.max_new or self.positions[i] >= self.max_len - 1:
-                req.done = True
-                req.status = "done"
-                req.t_done = now
-                self.stats["completed"] += 1
-                self.finished.append(req)
-                self.active[i] = None
-                self.positions[i] = 0
-                if self.store is not None:
-                    self.store.release(req.user)
+            self._maybe_finish(i, now)
         self.stats["ticks"] += trace.shape[0]
         self.stats["tokens"] += trace.shape[0] * len(live_idx)
+        self.stats["decode_tokens"] += trace.shape[0] * len(live_idx)
         self._sync_store_stats()
+        self._sync_pager_stats()
         return trace.shape[0] * len(live_idx)
 
     def run_until_idle(self, max_ticks: int = 10_000) -> None:
@@ -628,6 +852,38 @@ class ServeEngine:
         self.stats["store_resident_bytes"] = m["resident_bytes"]
         self.stats["store_fetch_time"] = m["fetch_time"]
 
+    def _sync_pager_stats(self) -> None:
+        """Mirror the KV block pool's counters/gauges into ``engine.stats``."""
+        if self.pager is None:
+            return
+        p = self.pager.stats
+        self.stats["kv_blocks_in_use"] = p["in_use"]
+        self.stats["kv_blocks_peak"] = p["peak_in_use"]
+        self.stats["kv_allocs"] = p["allocs"]
+        self.stats["kv_frees"] = p["frees"]
+        self.stats["kv_reserve_failures"] = p["reserve_failures"]
+
+    def kv_cache_bytes(self) -> int:
+        """Decode-cache bytes attributable to current load. Dense: every leaf
+        in full (the slot cache is the footprint, occupied or not). Paged:
+        pool leaves are charged per *used* block — the quantity that scales
+        with tokens held and that capacity planning sizes the pool by — plus
+        the non-pool leaves (rings, recurrent state, block table) in full."""
+        total = pool = 0
+        for leaf in jax.tree.leaves(self.cache):
+            nbytes = leaf.size * leaf.dtype.itemsize
+            total += nbytes
+            if (self.pager is not None and leaf.ndim == 5
+                    and leaf.shape[1] == self.pager.n_blocks
+                    and leaf.shape[2] == self.pager.block_size):
+                pool += nbytes
+        if self.pager is None:
+            return total
+        per_block = pool // max(self.pager.n_blocks, 1)
+        table_bytes = self.pager.table.size * self.pager.table.itemsize
+        return ((total - pool) + per_block * self.pager.blocks_in_use()
+                + table_bytes)
+
     def request_stats(self) -> list[dict]:
         """Per-completed-request latency metrics (seconds)."""
         return [{"rid": r.rid, "user": r.user, "prompt_len": len(r.prompt),
@@ -641,8 +897,10 @@ class ServeEngine:
         reqs = self.request_stats()
         ttfts = [r["ttft"] for r in reqs if r["ttft"] is not None]
         self._sync_store_stats()
+        self._sync_pager_stats()
         out = {
-            "decode_tok_per_s": self.stats["tokens"] / dt if dt else 0.0,
+            "decode_tok_per_s": (self.stats["decode_tokens"] / dt
+                                 if dt else 0.0),
             "prefill_tok_per_s": (self.stats["prefill_tokens"] / pt
                                   if pt else 0.0),
             "mean_ttft": float(np.mean(ttfts)) if ttfts else None,
@@ -650,4 +908,7 @@ class ServeEngine:
         }
         if self.store is not None:
             out["store"] = self.store.metrics()
+        if self.pager is not None:
+            out["kv_blocks_in_use"] = self.pager.blocks_in_use()
+            out["kv_blocks_peak"] = self.pager.stats["peak_in_use"]
         return out

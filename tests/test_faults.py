@@ -396,6 +396,51 @@ def test_engine_never_serves_unvalidated_bank():
 
 
 # ---------------------------------------------------------------------------
+# paged KV pool under churn: retirement never leaks or double-frees blocks
+# ---------------------------------------------------------------------------
+
+def test_paged_pool_churn_never_leaks_blocks():
+    """Seeded request churn against a deliberately tight block pool — waves of
+    mixed-length prompts (forcing reservation failures and FIFO queue waits),
+    invalid submissions rejected mid-flight, and poisoned bank installs
+    refused mid-flight. After the drain the pool must be whole: every alloc
+    matched by a free, no block still owned, refcounts all zero."""
+    rng = np.random.default_rng(SEED)
+    cfg, params, key = _mk()
+    cc = ColaConfig(mode="lora", family="lowrank", taps="qv", rank=4)
+    banks = [gl.init_adapters(cfg, cc, jax.random.fold_in(key, u))
+             for u in range(2)]
+    # 12 blocks x 8 positions: three worst-case requests oversubscribe it
+    eng = ServeEngine(cfg, params, slots=3, max_len=64, prefill_chunk=4,
+                      kv_layout="paged", kv_block=8, kv_blocks=12,
+                      user_adapters=banks)
+    poisoned = jax.tree.map(lambda a: a * np.nan, banks[1])
+    reqs, rid = [], 0
+    for wave in range(6):
+        for _ in range(int(rng.integers(1, 4))):
+            p = rng.integers(0, cfg.vocab_size, size=int(rng.integers(1, 31)))
+            r = Request(rid=rid, user=int(rng.integers(0, 2)), prompt=p,
+                        max_new=int(rng.integers(1, 11)))
+            rid += 1
+            reqs.append(r)
+            eng.submit(r)
+        # mid-churn faults: an invalid request and a poisoned bank, both
+        # rejected without touching any slot's pool accounting
+        eng.submit(Request(rid=10_000 + wave, user=0,
+                           prompt=np.array([], np.int32), max_new=1))
+        assert not eng.install_adapters(1, poisoned, version=wave + 1)
+        for _ in range(int(rng.integers(1, 6))):
+            eng.tick()
+    eng.run_until_idle()
+    assert all(r.status == "done" and len(r.out) == r.max_new for r in reqs)
+    eng.pager.assert_empty()
+    assert eng.stats["kv_allocs"] == eng.stats["kv_frees"] > 0
+    assert eng.stats["kv_blocks_in_use"] == 0
+    assert eng.stats["kv_blocks_peak"] <= 12
+    assert eng.stats["rejected"] == 6 and eng.stats["bank_rejected"] == 6
+
+
+# ---------------------------------------------------------------------------
 # watchdog recovery hook: straggler/hang -> checkpoint + channel reset
 # ---------------------------------------------------------------------------
 

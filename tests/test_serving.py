@@ -236,10 +236,13 @@ def test_engine_stats_consistency():
     assert eng.stats["completed"] == len(prompts)
     assert eng.stats["admitted"] == len(prompts)
     assert eng.stats["tokens"] == sum(len(r.out) for r in reqs) == 4 * len(prompts)
-    # prompt[:-1] goes through prefill, the last token through the first tick
-    assert eng.stats["prefill_tokens"] == sum(len(p) - 1 for p in prompts)
-    # 2 slots, 5 requests x 4 tokens -> at least ceil(20/2) decode ticks
-    assert eng.stats["ticks"] >= 10
+    # the full prompt goes through prefill; the first generated token is
+    # emitted from the prefill logits, the rest from decode ticks
+    assert eng.stats["prefill_tokens"] == sum(len(p) for p in prompts)
+    assert eng.stats["decode_tokens"] == eng.stats["tokens"] - len(prompts)
+    # 2 slots, 5 requests x 3 decode tokens (the first of the 4 comes from
+    # prefill) -> at least ceil(15/2) decode ticks
+    assert eng.stats["ticks"] >= 8
     stats = eng.request_stats()
     assert len(stats) == len(prompts)
     for s in stats:
