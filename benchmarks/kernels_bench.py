@@ -138,7 +138,43 @@ def collect() -> list[dict]:
     return entries
 
 
+def telemetry_run(out_dir, report=print):
+    """Export CI telemetry artifacts for the kernel suite: one Chrome-trace
+    span around the baseline collection with an instant marker per entry, and
+    a metric-registry snapshot of every entry's timing/throughput numbers."""
+    import json
+
+    from repro.telemetry import Telemetry
+    from repro.telemetry.tracing import validate_trace
+
+    os.makedirs(out_dir, exist_ok=True)
+    tm = Telemetry(trace=True, out_dir=out_dir)
+    tm.name_thread(0, "kernels")
+    with tm.span("kernels.collect", cat="bench", tid=0):
+        entries = collect()
+    for e in entries:
+        tm.tracer.instant(f"{e['op']}[{e['shape']}]", cat="bench", tid=0,
+                          **e["metrics"])
+        tm.registry.absorb(f"bench.{e['op']}.{e['shape']}", e["metrics"])
+    doc = tm.tracer.to_doc()
+    errors = validate_trace(doc)
+    assert not errors, f"exported trace failed validation: {errors}"
+    trace_path = os.path.join(out_dir, "kernels_trace.json")
+    tm.export_trace(trace_path)
+    snap_path = os.path.join(out_dir, "kernels_metrics.json")
+    with open(snap_path, "w") as f:
+        json.dump(tm.snapshot(), f, indent=1, sort_keys=True)
+        f.write("\n")
+    report(f"# telemetry artifacts: {trace_path} ({len(entries)} entries), "
+           f"{snap_path}")
+    return 0
+
+
 def main(argv=None) -> int:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    if "--telemetry-out" in argv:
+        i = argv.index("--telemetry-out")
+        return telemetry_run(argv[i + 1])
     return pb.run_cli(argv, collect=collect, baseline_name="BENCH_kernels.json",
                       meta={"suite": "kernels_bench", "device":
                             jax.devices()[0].platform})

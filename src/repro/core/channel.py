@@ -24,6 +24,7 @@ a `RetryPolicy` and enforces four invariants the rest of the stack relies on:
 """
 from __future__ import annotations
 
+import time
 from typing import Any
 
 import jax
@@ -31,6 +32,7 @@ import numpy as np
 
 from repro.runtime.faults import (DeadLetter, Delivery, FaultInjector,
                                   FitTimeout, RetryPolicy, call_with_timeout)
+from repro.telemetry import NULL_CONTEXT
 
 
 def _tree_sums(tree) -> tuple[float, ...]:
@@ -68,7 +70,7 @@ class OffloadChannel:
                  policy: RetryPolicy | None = None,
                  max_update_norm: float = 1e4,
                  quarantine_after: int = 2,
-                 on_commit=None):
+                 on_commit=None, telemetry=None):
         self.offloader = offloader
         self.user = user
         self.injector = injector
@@ -80,6 +82,17 @@ class OffloadChannel:
         # polling `publish_banks` (e.g. a serving engine's tiered adapter
         # store subscribing to fit results). Only ever sees committed banks.
         self.on_commit = on_commit
+
+        # telemetry is observational: every record/span reads values already
+        # computed for the reliability protocol, never perturbs it
+        self.tm = telemetry if telemetry else None
+        if self.tm:
+            self.tm.name_thread(1, "offload")
+        # last failure this channel observed (reason string + offending seq),
+        # exposed via health() so operators can tell *why* a user degraded
+        # without trawling logs
+        self.last_error: str | None = None
+        self.last_error_seq: int | None = None
 
         self.version = 0
         self.last_good: dict = offloader.adapters   # validated by construction
@@ -108,8 +121,37 @@ class OffloadChannel:
         out = dict(self.health_counters)
         out.update(version=self.version, quarantined=self.quarantined,
                    fail_streak=self._fail_streak,
-                   dead_letter_count=len(self.dead_letters))
+                   dead_letter_count=len(self.dead_letters),
+                   last_error=self.last_error,
+                   last_error_seq=self.last_error_seq)
         return out
+
+    def health_brief(self) -> dict:
+        """Compact health record for periodic logging (TrainLoop's
+        metrics.jsonl): the handful of fields that flag a degrading user."""
+        h = self.health_counters
+        return {"version": self.version, "quarantined": self.quarantined,
+                "fail_streak": self._fail_streak,
+                "dead_letters": len(self.dead_letters),
+                "fits_committed": h["fits_committed"],
+                "rollbacks": h["rollbacks"],
+                "last_error": self.last_error,
+                "last_error_seq": self.last_error_seq}
+
+    # -- telemetry ----------------------------------------------------------
+    def _span(self, name: str, **args):
+        if self.tm is None:
+            return NULL_CONTEXT
+        return self.tm.span(name, cat="offload", tid=1, **args)
+
+    def _record(self, kind: str, **fields) -> None:
+        if self.tm is not None:
+            self.tm.record("user", self.user, kind, **fields)
+
+    def _note_error(self, kind: str, reason: str, seq: int) -> None:
+        self.last_error = reason
+        self.last_error_seq = seq
+        self._record(kind, reason=reason, seq=seq)
 
     # -- transport: server -> offload device -------------------------------
     def _transmit(self, kind: str, obj) -> list[Delivery]:
@@ -124,10 +166,15 @@ class OffloadChannel:
         False when the user is quarantined or retries were exhausted (the
         payload is then dead-lettered, not silently lost).
         """
+        with self._span("channel.push", user=self.user, seq=self._seq):
+            return self._push(data)
+
+    def _push(self, data: dict[str, tuple]) -> bool:
         h = self.health_counters
         h["pushes"] += 1
         if self.quarantined:
             h["refused_quarantined"] += 1
+            self._note_error("push_refused", "quarantined", self._seq)
             return False
         seq = self._seq
         self._seq += 1
@@ -146,15 +193,19 @@ class OffloadChannel:
                     continue
                 if not _tree_finite(d.obj):
                     h["nan_rejected"] += 1
+                    self._note_error("payload_nack", "non-finite payload", seq)
                     continue
                 if not _checksums_match(_tree_sums(d.obj), want):
                     h["corrupt_rejected"] += 1
+                    self._note_error("payload_nack",
+                                     "payload checksum mismatch", seq)
                     continue
                 self._seen.add(seq)
                 self.offloader.push(d.obj)
                 accepted = True
             if accepted:
                 h["delivered"] += 1
+                self._record("delivered", seq=seq, attempts=attempt)
                 return True
             h["send_retries"] += 1
             h["backoff_s"] += self.policy.wait(attempt, self._rng)
@@ -162,6 +213,7 @@ class OffloadChannel:
             self.user, seq, "payload", "send retries exhausted",
             self.policy.max_attempts, data))
         h["dead_letters"] += 1
+        self._note_error("dead_letter", "send retries exhausted", seq)
         return False
 
     # -- fit round: offload device -> server --------------------------------
@@ -193,9 +245,19 @@ class OffloadChannel:
         bank and, past ``quarantine_after`` consecutive failures, the user
         is quarantined).
         """
-        h = self.health_counters
         if self.quarantined or not self.offloader.ready:
             return None
+        t0 = time.perf_counter()
+        with self._span("channel.fit_round", user=self.user, seq=self._seq,
+                        version=self.version):
+            out = self._fit_round(t0)
+        if self.tm is not None:
+            self.tm.registry.histogram("channel.fit_round_s").observe(
+                time.perf_counter() - t0)
+        return out
+
+    def _fit_round(self, t0: float) -> dict | None:
+        h = self.health_counters
         snap = self._snapshot()
         failure = "unknown"
         for attempt in range(1, self.policy.max_attempts + 1):
@@ -206,12 +268,14 @@ class OffloadChannel:
             except FitTimeout:
                 h["fit_timeouts"] += 1
                 failure = "fit timeout"
+                self._note_error("fit_timeout", failure, self._seq)
                 self._restore(snap)
                 h["backoff_s"] += self.policy.wait(attempt, self._rng)
                 continue
             except Exception as e:  # numerical failure on the fit device
                 h["fit_errors"] += 1
                 failure = f"fit error: {e}"
+                self._note_error("fit_error", failure, self._seq)
                 self._restore(snap)
                 h["backoff_s"] += self.policy.wait(attempt, self._rng)
                 continue
@@ -228,6 +292,7 @@ class OffloadChannel:
             if delivered is None:
                 failure = "adapter return dropped"
                 h["send_retries"] += 1
+                self._note_error("fit_nack", failure, self._seq)
                 self._restore(snap)    # refit is deterministic; retry whole round
                 h["backoff_s"] += self.policy.wait(attempt, self._rng)
                 continue
@@ -235,6 +300,7 @@ class OffloadChannel:
             if reason is not None:
                 h["fit_rejected"] += 1
                 failure = reason
+                self._note_error("fit_rejected", failure, self._seq)
                 self._restore(snap)
                 h["backoff_s"] += self.policy.wait(attempt, self._rng)
                 continue
@@ -244,6 +310,8 @@ class OffloadChannel:
             self.last_good = delivered
             self._fail_streak = 0
             h["fits_committed"] += 1
+            self._record("commit", version=self.version, attempts=attempt,
+                         fit_s=time.perf_counter() - t0)
             if self.on_commit is not None:
                 self.on_commit(self.user, self.version, delivered)
             return delivered
@@ -255,6 +323,17 @@ class OffloadChannel:
         h["dead_letters"] += 1
         h["rollbacks"] += 1
         self._fail_streak += 1
+        self._note_error("rollback", failure, self._seq)
+        if self.tm is not None:
+            if self._fail_streak >= self.quarantine_after:
+                # quarantine is terminal for the user: freeze the evidence
+                self._record("quarantine", reason=failure,
+                             fail_streak=self._fail_streak)
+                self.tm.dump("user", self.user,
+                             f"quarantined after {self._fail_streak} failed "
+                             f"fit rounds: {failure}")
+            else:
+                self.tm.dump("user", self.user, f"fit rollback: {failure}")
         if self._fail_streak >= self.quarantine_after:
             self.quarantined = True
         return None
@@ -270,3 +349,4 @@ class OffloadChannel:
         self.offloader.adapters = self.last_good
         self.quarantined = False
         self._fail_streak = 0
+        self._record("reset", version=self.version)

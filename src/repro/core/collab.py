@@ -27,6 +27,7 @@ from repro.core.channel import OffloadChannel
 from repro.core.offload import Offloader
 from repro.models import model as model_lib
 from repro.optim import optimizers as optim_lib
+from repro.telemetry import NULL_CONTEXT
 
 Array = jax.Array
 
@@ -51,9 +52,10 @@ class CollabSession:
                  key: Array, optimizer=None, lr=1e-3,
                  families: list[str] | None = None,
                  injector=None, policy=None, max_update_norm: float = 1e4,
-                 quarantine_after: int = 2):
+                 quarantine_after: int = 2, telemetry=None):
         assert cc.mode == "faithful_offload" and cc.merged, \
             "collaboration uses merged faithful-offload training (Alg. 1)"
+        self.tm = telemetry if telemetry else None
         self.cfg, self.cc = cfg, cc
         self.base_params = params
         self.K = cc.users
@@ -82,7 +84,7 @@ class CollabSession:
             self.channels.append(OffloadChannel(
                 off, user=k, injector=injector, policy=policy,
                 max_update_norm=max_update_norm,
-                quarantine_after=quarantine_after))
+                quarantine_after=quarantine_after, telemetry=self.tm))
         self._server = jax.jit(functools.partial(
             gl.server_step_a, cfg, self.server_spec))
         self._merged_cache = None
@@ -115,12 +117,21 @@ class CollabSession:
         updated = False
         for k in range(self.K):
             ch = self.channels[k]
-            ch.push(mask_user_rows(data, user_ids, k))
-            if ch.fit_round() is not None:
-                updated = True
+            # per-user offload-round span; the channel's push/fit spans
+            # (carrying transport seq ids) nest inside it
+            with self._offload_span(ch):
+                ch.push(mask_user_rows(data, user_ids, k))
+                if ch.fit_round() is not None:
+                    updated = True
         if updated:
             self._merged_cache = None
         return float(loss)
+
+    def _offload_span(self, ch):
+        if self.tm is None:
+            return NULL_CONTEXT
+        return self.tm.span("session.offload_round", cat="offload", tid=1,
+                            user=ch.user, seq=ch._seq)
 
     # -- fault-tolerance surface ----------------------------------------
     def bank_versions(self) -> list[int]:

@@ -22,6 +22,7 @@ import numpy as np
 from repro.core import gl
 from repro.core.taps import ColaSpec
 from repro.optim import optimizers as optim_lib
+from repro.telemetry import annotate
 
 Array = jax.Array
 
@@ -125,8 +126,9 @@ class Offloader:
         if not self.ready:
             return None
         data = self._materialise()
-        self.adapters, self.opt_state, _ = self._fit(
-            self.adapters, self.opt_state, data)
+        with annotate("offload.fit"):
+            self.adapters, self.opt_state, _ = self._fit(
+                self.adapters, self.opt_state, data)
         self.buffers.clear()
         self.stats["fits"] += 1
         return self.adapters

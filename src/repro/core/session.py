@@ -27,6 +27,7 @@ from repro.core.channel import OffloadChannel
 from repro.core.offload import Offloader
 from repro.models import model as model_lib
 from repro.optim import optimizers as optim_lib
+from repro.telemetry import NULL_CONTEXT
 
 Array = jax.Array
 
@@ -34,7 +35,8 @@ Array = jax.Array
 class ColaSession:
     def __init__(self, cfg: ModelConfig, cc: ColaConfig, params: dict,
                  key: Array, optimizer=None, lr=1e-3, offload_device=None,
-                 injector=None, policy=None):
+                 injector=None, policy=None, telemetry=None):
+        self.tm = telemetry if telemetry else None
         self.cfg, self.cc = cfg, cc
         self.base_params = params
         self.optimizer = optimizer or optim_lib.adamw(lr)
@@ -60,7 +62,8 @@ class ColaSession:
             # transport; the channel adds retry/validation/versioning and is a
             # pure pass-through when no faults are injected.
             self.channel = OffloadChannel(self.offloader, user=0,
-                                          injector=injector, policy=policy)
+                                          injector=injector, policy=policy,
+                                          telemetry=self.tm)
         else:  # lora
             self.opt_state = self.optimizer.init(self.adapters)
 
@@ -73,6 +76,13 @@ class ColaSession:
 
         self._grad_accum = None
         self._merged_cache: dict | None = None
+
+    # ------------------------------------------------------------------
+    def _offload_span(self, ch):
+        if self.tm is None:
+            return NULL_CONTEXT
+        return self.tm.span("session.offload_round", cat="offload", tid=1,
+                            user=ch.user, seq=ch._seq)
 
     # ------------------------------------------------------------------
     def _effective_params(self) -> dict:
@@ -102,8 +112,11 @@ class ColaSession:
             params = self._effective_params()
             adapters_in = ({} if cc.merged else self.adapters)
             loss, data, _ = self._server(params, adapters_in, batch)
-            self.channel.push(data)
-            new = self.channel.fit_round()
+            # one offload round = push + fit; the channel's own push/fit
+            # spans nest inside, carrying the transport seq ids
+            with self._offload_span(self.channel):
+                self.channel.push(data)
+                new = self.channel.fit_round()
             if new is not None:
                 self.adapters = new
                 self._merged_cache = None   # re-merge from pristine base

@@ -70,6 +70,14 @@ def cola_fit_lowrank(x: Array, grad_h: Array, A: Array, B: Array, *,
     r = A.shape[-1]
     bt = _block_t(T)
     grid = (T // bt,)
+    with jax.named_scope("cola_fit_lowrank"):
+        dA, dB = _pallas_fit(x, grad_h, A, B, scale=scale, bt=bt, grid=grid,
+                             d_in=d_in, d_out=d_out, r=r, interpret=interpret)
+    return dA, dB
+
+
+def _pallas_fit(x, grad_h, A, B, *, scale, bt, grid, d_in, d_out, r,
+                interpret):
     dA, dB = pl.pallas_call(
         functools.partial(_kernel, scale=scale),
         grid=grid,

@@ -108,12 +108,15 @@ def _cosine(a: np.ndarray, b: np.ndarray) -> float:
 class AdapterStore:
     """Host-tier adapter bank with a fixed-R LRU device-resident cache."""
 
-    def __init__(self, resident: int, *, store: str = "f32"):
+    def __init__(self, resident: int, *, store: str = "f32", telemetry=None):
         if resident < 1:
             raise ValueError(f"resident slot count must be >= 1, got {resident}")
         assert store in ("f32", "int8"), store
         self.resident = int(resident)
         self.store = store
+        # observational only: fetch-latency histogram + per-user residency
+        # breadcrumbs; `counters` stays the always-on authority
+        self.tm = telemetry if telemetry else None
         # host tier: key -> numpy pytree; users route to a key (own or cluster)
         self._host: dict[UserKey, dict] = {}
         self._route: dict[int, UserKey] = {}
@@ -134,8 +137,8 @@ class AdapterStore:
 
     @classmethod
     def from_users(cls, user_adapters: Sequence[dict], *, resident: int,
-                   store: str = "f32") -> "AdapterStore":
-        st = cls(resident, store=store)
+                   store: str = "f32", telemetry=None) -> "AdapterStore":
+        st = cls(resident, store=store, telemetry=telemetry)
         for uid, adapters in enumerate(user_adapters):
             st.register(uid, adapters)
         return st
@@ -270,6 +273,7 @@ class AdapterStore:
         self.counters["misses"] += 1
         slot = next((s for s, k in enumerate(self._slot_key) if k is None),
                     None)
+        evicted = None
         if slot is None:
             pinned = self._pinned_keys()
             victims = [(self._last_used[s], s)
@@ -280,12 +284,19 @@ class AdapterStore:
                     "adapter store: no evictable resident row (all "
                     f"{self.resident} rows pinned by live users)")
             _, slot = min(victims)
-            del self._key_slot[self._slot_key[slot]]
+            evicted = self._slot_key[slot]
+            del self._key_slot[evicted]
             self.counters["evictions"] += 1
         t0 = time.perf_counter()
         self._write_row(slot, self._host[key])
-        self.counters["fetch_time"] += time.perf_counter() - t0
+        dt = time.perf_counter() - t0
+        self.counters["fetch_time"] += dt
         self.counters["fetches"] += 1
+        if self.tm is not None:
+            self.tm.registry.histogram("store.fetch_s").observe(dt)
+            self.tm.record("user", key[1], "store_fetch", row=int(slot),
+                           evicted=str(evicted) if evicted else None,
+                           fetch_s=dt)
         self._slot_key[slot] = key
         self._key_slot[key] = slot
         return slot

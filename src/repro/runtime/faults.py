@@ -110,13 +110,24 @@ class FaultInjector:
     """
 
     def __init__(self, profiles: dict[int, FaultProfile] | None = None, *,
-                 default: FaultProfile | None = None, seed: int = 0):
+                 default: FaultProfile | None = None, seed: int = 0,
+                 telemetry=None):
         self.profiles = dict(profiles or {})
         self.default = default or FaultProfile()
         self.seed = seed
         self._rngs: dict[int, np.random.Generator] = {}
         self.injected = {"drop": 0, "delay": 0, "duplicate": 0, "corrupt": 0,
                          "nan": 0}
+        # when attached, each injected fault leaves a flight-recorder
+        # breadcrumb in the target user's ring — a chaos run's postmortems
+        # then show the injected cause right next to the channel's reaction.
+        # RNG draws are untouched, so seeded replays stay exact.
+        self.tm = telemetry if telemetry else None
+
+    def _note(self, user: int, kind: str, fault: str) -> None:
+        if self.tm is not None:
+            self.tm.record("user", user, "fault_injected", target=kind,
+                           fault=fault)
 
     def profile(self, user: int) -> FaultProfile:
         return self.profiles.get(user, self.default)
@@ -135,20 +146,25 @@ class FaultInjector:
         r = rng.random()
         if r < prof.drop:
             self.injected["drop"] += 1
+            self._note(user, kind, "drop")
             return []
         late = 0
         if r < prof.drop + prof.delay:
             self.injected["delay"] += 1
+            self._note(user, kind, "delay")
             late = prof.delay_ticks
         copies = 1
         if rng.random() < prof.duplicate:
             self.injected["duplicate"] += 1
+            self._note(user, kind, "duplicate")
             copies = 2
         if rng.random() < prof.corrupt:
             self.injected["corrupt"] += 1
+            self._note(user, kind, "corrupt")
             obj = _poison_tree(obj, rng, prof.corrupt_scale)
         if rng.random() < prof.nan:
             self.injected["nan"] += 1
+            self._note(user, kind, "nan")
             obj = _poison_tree(obj, rng, None)
         return [Delivery(obj, late_ticks=late) for _ in range(copies)]
 

@@ -52,10 +52,13 @@ class BlockPager:
     """Host-side block pool accounting + the device-shippable block table."""
 
     def __init__(self, n_blocks: int, block_size: int, slots: int,
-                 max_len: int):
+                 max_len: int, telemetry=None):
         if n_blocks < 1 or block_size < 1:
             raise ValueError(f"need n_blocks >= 1 and block_size >= 1, got "
                              f"{n_blocks}, {block_size}")
+        # observational only (flight-recorder breadcrumbs + postmortems on
+        # accounting violations); the pager never blocks on it
+        self.tm = telemetry if telemetry else None
         self.n_blocks = n_blocks
         self.block_size = block_size
         self.slots = slots
@@ -69,6 +72,20 @@ class BlockPager:
         self.table = np.zeros((slots, self.max_blocks), np.int32)
         self.stats = {"allocs": 0, "frees": 0, "in_use": 0, "peak_in_use": 0,
                       "reserve_failures": 0}
+
+    # -- telemetry ---------------------------------------------------------
+    def _record(self, slot: int, kind: str, **fields) -> None:
+        if self.tm is not None:
+            self.tm.record("slot", slot, kind, **fields)
+
+    def _raise(self, slot, msg: str) -> None:
+        """Freeze the offending slot's flight-recorder ring into a postmortem
+        before raising — a PagerError is a terminal accounting violation and
+        the events leading up to it are the evidence."""
+        if self.tm is not None:
+            self.tm.record("slot", slot, "pager_error", message=msg)
+            self.tm.dump("slot", slot, f"PagerError: {msg}")
+        raise PagerError(msg)
 
     # -- capacity ----------------------------------------------------------
     def blocks_for(self, n_positions: int) -> int:
@@ -91,8 +108,11 @@ class BlockPager:
         need = max(need - int(self._reserved[slot]), 0)
         if need > self.free_unreserved():
             self.stats["reserve_failures"] += 1
+            self._record(slot, "kv_reserve_fail", need=need,
+                         free_unreserved=self.free_unreserved())
             return False
         self._reserved[slot] += need
+        self._record(slot, "kv_reserve", blocks=need)
         return True
 
     # -- alloc / free ------------------------------------------------------
@@ -124,12 +144,13 @@ class BlockPager:
         and drop any unused reservation. Double/foreign frees raise."""
         for blk in self._owned[slot]:
             if self._refcount[blk] <= 0:
-                raise PagerError(f"double free of block {blk} (slot {slot})")
+                self._raise(slot, f"double free of block {blk} (slot {slot})")
             self._refcount[blk] -= 1
             if self._refcount[blk] == 0:
                 self._free.append(blk)
                 self.stats["frees"] += 1
                 self.stats["in_use"] -= 1
+        self._record(slot, "kv_release", blocks=len(self._owned[slot]))
         self._owned[slot] = []
         self._reserved[slot] = 0
         self.table[slot, :] = 0
@@ -145,10 +166,10 @@ class BlockPager:
         """Raise unless the pool is whole (no leaked or still-owned blocks)."""
         owned = sum(len(o) for o in self._owned)
         if owned or self.stats["in_use"] != 0:
-            raise PagerError(f"leaked blocks: {owned} still owned, "
-                             f"in_use={self.stats['in_use']}")
+            self._raise("pool", f"leaked blocks: {owned} still owned, "
+                        f"in_use={self.stats['in_use']}")
         if len(self._free) != self.n_blocks:
-            raise PagerError(f"free list holds {len(self._free)} of "
-                             f"{self.n_blocks} blocks")
+            self._raise("pool", f"free list holds {len(self._free)} of "
+                        f"{self.n_blocks} blocks")
         if int(self._refcount.sum()) != 0:
-            raise PagerError("nonzero refcounts on an empty pool")
+            self._raise("pool", "nonzero refcounts on an empty pool")

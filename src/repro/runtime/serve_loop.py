@@ -57,6 +57,7 @@ all-resident engine.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import time
 from typing import Any
@@ -71,6 +72,8 @@ from repro.core import taps as taps_lib
 from repro.models import model as model_lib
 from repro.runtime.adapter_store import AdapterStore
 from repro.runtime.kv_pager import BlockPager
+from repro.telemetry import NULL_CONTEXT, annotate
+from repro.telemetry.metrics import NULL_METRIC, percentiles
 
 Array = jax.Array
 
@@ -206,7 +209,8 @@ class ServeEngine:
                  prefill_chunk: int | None = None,
                  kv_layout: str = "dense", kv_block: int = 16,
                  kv_blocks: int | None = None,
-                 max_prompt: int | None = None):
+                 max_prompt: int | None = None,
+                 telemetry=None):
         assert prefill_mode in ("batched", "reference"), prefill_mode
         assert bank_store in ("f32", "int8"), bank_store
         assert kv_layout in ("dense", "paged"), kv_layout
@@ -220,6 +224,25 @@ class ServeEngine:
                 "kv_layout='paged' requires prefill_chunk: the monolithic "
                 "prefill scatters a dense cache (scatter_prefill_cache), "
                 "only the chunked path writes through the block table")
+        # Telemetry is strictly observational: it only reads host-side values
+        # after dispatches complete, so generated tokens are bit-identical
+        # telemetry-on vs. off (guarded by tests/test_telemetry.py). The
+        # disabled path is `self.tm is None` checks plus NULL_METRIC no-ops.
+        self.tm = telemetry if telemetry else None
+        _reg = self.tm.registry if self.tm else None
+        _hist = (_reg.histogram if _reg is not None
+                 else (lambda name: NULL_METRIC))
+        self._h_ttft = _hist("serve.ttft_s")
+        self._h_latency = _hist("serve.latency_s")
+        self._h_decode_tick = _hist("serve.decode_tick_s")
+        self._h_prefill_chunk = _hist("serve.prefill_chunk_s")
+        self._h_prefill_call = _hist("serve.prefill_call_s")
+        if self.tm:
+            self.tm.name_thread(0, "serve")
+        # always-on bounded duration samples so throughput() reports tail
+        # percentiles (satellite 1) even without a Telemetry attached
+        self._decode_tick_s: collections.deque = collections.deque(maxlen=4096)
+        self._prefill_s: collections.deque = collections.deque(maxlen=4096)
         self.cfg = cfg
         self.params = params
         self.slots = slots
@@ -250,7 +273,8 @@ class ServeEngine:
         if kv_layout == "paged":
             n_blocks = (kv_blocks if kv_blocks is not None
                         else slots * (-(-max_len // kv_block)))
-            self.pager = BlockPager(n_blocks, kv_block, slots, max_len)
+            self.pager = BlockPager(n_blocks, kv_block, slots, max_len,
+                                    telemetry=self.tm)
             kv_blocks = n_blocks
             if model_lib.layer_plan(cfg)[0] == "pairs":
                 # local-window ring: must hold the window plus a full chunk's
@@ -275,7 +299,8 @@ class ServeEngine:
                 # tiered store: host tier holds every user, the device bank is
                 # a fixed-R LRU cache — user count decouples from HBM.
                 self.store = AdapterStore.from_users(
-                    user_adapters, resident=resident_slots, store=bank_store)
+                    user_adapters, resident=resident_slots, store=bank_store,
+                    telemetry=self.tm)
                 if cluster_threshold is not None:
                     self.store.build_clusters(cluster_threshold,
                                               mode=cluster_mode)
@@ -304,6 +329,38 @@ class ServeEngine:
                       "store_hits": 0, "store_misses": 0, "store_evictions": 0,
                       "store_hit_rate": 0.0, "store_pinned": 0,
                       "store_resident_bytes": 0, "store_fetch_time": 0.0}
+
+    # -- telemetry ---------------------------------------------------------
+    def _span(self, name: str, **args):
+        """A serve-lane trace span, or the shared null context when tracing
+        is off — cheap enough to leave inline in the tick path."""
+        if self.tm is None:
+            return NULL_CONTEXT
+        return self.tm.span(name, cat="serve", tid=0, **args)
+
+    def _record(self, scope: str, key, kind: str, **fields) -> None:
+        if self.tm is not None:
+            self.tm.record(scope, key, kind, **fields)
+
+    def telemetry_snapshot(self) -> dict:
+        """Sync the legacy stat dicts, absorb them into the metric registry
+        under ``serve.*`` / ``store.*`` / ``pager.*`` and return the registry
+        snapshot. Empty dict when telemetry is disabled — ``engine.stats``
+        stays the always-on authority."""
+        if self.tm is None:
+            return {}
+        self._sync_store_stats()
+        self._sync_pager_stats()
+        reg = self.tm.registry
+        # store_*/kv_* keys are mirrors of the store/pager dicts; absorb the
+        # originals under their own namespaces instead of duplicating them
+        reg.absorb("serve", {k: v for k, v in self.stats.items()
+                             if not k.startswith(("store_", "kv_"))})
+        if self.store is not None:
+            reg.absorb("store", self.store.metrics())
+        if self.pager is not None:
+            reg.absorb("pager", self.pager.stats)
+        return reg.snapshot()
 
     # -- jitted core -----------------------------------------------------
     # The bank is a jit *argument*, never a closure: a closed-over bank would
@@ -427,6 +484,12 @@ class ServeEngine:
 
     # -- adapter bank lifecycle ---------------------------------------------
     def install_adapters(self, user: int, adapters: dict, version: int) -> bool:
+        with self._span("serve.bank_install", user=user, version=version):
+            ok = self._install_adapters(user, adapters, version)
+        self._record("user", user, "bank_install", version=version, ok=ok)
+        return ok
+
+    def _install_adapters(self, user: int, adapters: dict, version: int) -> bool:
         """Hot-swap one user's adapters into the serving bank.
 
         Accepts only *validated version bumps*: the version must exceed the
@@ -578,6 +641,10 @@ class ServeEngine:
             for k, i in enumerate(admitted):
                 self.res_idx[i] = res_rows[k]
         self.stats["admitted"] += len(admitted)
+        for i in admitted:
+            r = self.active[i]
+            self._record("slot", i, "admit", rid=r.rid, user=r.user,
+                         prompt_len=len(r.prompt))
         if self.prefill_chunk is not None:
             return   # chunk rounds (one per tick) do the prefill work
         rows = [(i, np.asarray(self.active[i].prompt, np.int32))
@@ -590,8 +657,12 @@ class ServeEngine:
                     nxt = self._feed(i, int(tok), t)
                 self._first_token(i, nxt, time.perf_counter())
         else:
-            self._prefill_batch(rows)
-        self.stats["prefill_time"] += time.perf_counter() - t0
+            with self._span("serve.prefill", rows=len(rows)):
+                self._prefill_batch(rows)
+        dt = time.perf_counter() - t0
+        self.stats["prefill_time"] += dt
+        self._prefill_s.append(dt)
+        self._h_prefill_call.observe(dt)
         self.stats["prefill_calls"] += 1
         self.stats["prefill_tokens"] += sum(len(f) for _, f in rows)
         now = time.perf_counter()
@@ -671,6 +742,9 @@ class ServeEngine:
         req._consumed = len(req.prompt)   # prompt fully in cache: decode-live
         self.positions[i] = len(req.prompt)
         self.stats["tokens"] += 1
+        self._h_ttft.observe(now - req.t_submit)
+        self._record("slot", i, "first_token", rid=req.rid, user=req.user,
+                     ttft=now - req.t_submit)
 
     def _maybe_finish(self, i: int, now: float) -> None:
         req = self.active[i]
@@ -684,6 +758,10 @@ class ServeEngine:
         req.status = "done"
         req.t_done = now
         self.stats["completed"] += 1
+        if req.latency is not None:
+            self._h_latency.observe(req.latency)
+        self._record("slot", i, "retire", rid=req.rid, user=req.user,
+                     new_tokens=len(req.out))
         self.finished.append(req)
         self.active[i] = None
         self.positions[i] = 0
@@ -747,7 +825,10 @@ class ServeEngine:
                     self._maybe_finish(i, now)
             self.stats["prefill_chunks"] += len(idx_list)
         self.stats["chunk_rounds"] += 1
-        self.stats["prefill_time"] += time.perf_counter() - t0
+        dt = time.perf_counter() - t0
+        self.stats["prefill_time"] += dt
+        self._prefill_s.append(dt)
+        self._h_prefill_chunk.observe(dt)
         return pend
 
     def _burst_len(self, live_idx: list[int]) -> int:
@@ -775,9 +856,19 @@ class ServeEngine:
         fully in cache (or a burst when ``decode_burst`` allows; bursts are
         capped to 1 while any slot is prefilling so the chunk interleave — and
         with it decode latency — stays per-tick flat)."""
-        self._admit()
-        prefilling = (self._chunk_round() if self.prefill_chunk is not None
-                      else [])
+        with self._span("serve.tick", tick=self.stats["ticks"]):
+            return self._tick_inner()
+
+    def _tick_inner(self) -> int:
+        if self.queue:
+            with self._span("serve.admit", queued=len(self.queue)):
+                self._admit()
+        prefilling: list[int] = []
+        if self.prefill_chunk is not None and any(
+                r is not None and r._consumed < len(r.prompt)
+                for r in self.active):
+            with self._span("serve.prefill_chunk"):
+                prefilling = self._chunk_round()
         live_idx = [i for i, r in enumerate(self.active)
                     if r is not None and r._consumed >= len(r.prompt)]
         if not live_idx:
@@ -801,21 +892,28 @@ class ServeEngine:
         idx = jnp.asarray(self._dispatch_idx())
         table = self._table()
         t0 = time.perf_counter()
-        if n <= 1:
-            nxt, self.cache = self._decode(self.params, bank, self.cache,
-                                           table, jnp.asarray(toks),
-                                           jnp.asarray(self.positions),
-                                           idx, jnp.asarray(live))
-            trace = np.asarray(nxt)[None]                      # (1, slots)
-        else:
-            trace, self.cache = self._decode_n(self.params, bank,
-                                               self.cache, table,
-                                               jnp.asarray(toks),
+        with self._span("serve.decode", live=len(live_idx), burst=n), \
+                annotate("serve.decode"):
+            if n <= 1:
+                nxt, self.cache = self._decode(self.params, bank, self.cache,
+                                               table, jnp.asarray(toks),
                                                jnp.asarray(self.positions),
-                                               idx, jnp.asarray(live), n=n)
-            trace = np.asarray(trace)                          # (n, slots)
+                                               idx, jnp.asarray(live))
+                trace = np.asarray(nxt)[None]                  # (1, slots)
+            else:
+                trace, self.cache = self._decode_n(self.params, bank,
+                                                   self.cache, table,
+                                                   jnp.asarray(toks),
+                                                   jnp.asarray(self.positions),
+                                                   idx, jnp.asarray(live),
+                                                   n=n)
+                trace = np.asarray(trace)                      # (n, slots)
         now = time.perf_counter()
         self.stats["decode_time"] += now - t0
+        # one sample per tick decoded: a burst's dispatch wall is split evenly
+        # so percentiles stay comparable across decode_burst settings
+        self._decode_tick_s.append((now - t0) / trace.shape[0])
+        self._h_decode_tick.observe((now - t0) / trace.shape[0])
         for step in range(trace.shape[0]):
             for i in live_idx:
                 req = self.active[i]
@@ -891,11 +989,17 @@ class ServeEngine:
                  "latency": r.latency} for r in self.finished]
 
     def throughput(self) -> dict:
-        """Aggregate engine throughput; decode tokens/sec excludes prefill."""
+        """Aggregate engine throughput; decode tokens/sec excludes prefill.
+
+        Tail latency rides along: ``ttft`` / ``latency`` summarise completed
+        requests, ``decode_tick`` / ``prefill`` the per-dispatch duration
+        rings (each is None or {count, mean, max, p50, p95, p99} seconds —
+        means hide stalls, so report the percentiles, not ``mean_ttft``)."""
         dt = self.stats["decode_time"]
         pt = self.stats["prefill_time"]
         reqs = self.request_stats()
         ttfts = [r["ttft"] for r in reqs if r["ttft"] is not None]
+        lats = [r["latency"] for r in reqs if r["latency"] is not None]
         self._sync_store_stats()
         self._sync_pager_stats()
         out = {
@@ -904,6 +1008,10 @@ class ServeEngine:
             "prefill_tok_per_s": (self.stats["prefill_tokens"] / pt
                                   if pt else 0.0),
             "mean_ttft": float(np.mean(ttfts)) if ttfts else None,
+            "ttft": percentiles(ttfts),
+            "latency": percentiles(lats),
+            "decode_tick": percentiles(self._decode_tick_s),
+            "prefill": percentiles(self._prefill_s),
             "completed": self.stats["completed"],
         }
         if self.store is not None:

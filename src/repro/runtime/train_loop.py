@@ -26,15 +26,24 @@ class TrainLoop:
     def __init__(self, session, data, workdir: str, *, ckpt_every: int = 50,
                  log_every: int = 10, keep: int = 3,
                  eval_fn: Callable[[int], dict] | None = None,
-                 eval_every: int = 0, recover_on_straggler: bool = False):
+                 eval_every: int = 0, recover_on_straggler: bool = False,
+                 telemetry=None):
         self.session = session
         self.data = data
         self.workdir = workdir
         os.makedirs(workdir, exist_ok=True)
+        # telemetry: step-time histogram + straggler postmortems ride through
+        # the watchdog; the metric registry streams to telemetry.jsonl next
+        # to the (always-on) metrics.jsonl
+        self.tm = telemetry if telemetry else None
+        if self.tm:
+            self.tm.registry.stream_to(
+                os.path.join(workdir, "telemetry.jsonl"))
         self.ckpt = CheckpointManager(os.path.join(workdir, "ckpt"), keep=keep)
         self.watchdog = Watchdog(
             heartbeat_path=os.path.join(workdir, "heartbeat.json"),
-            on_straggler=self._on_straggler if recover_on_straggler else None)
+            on_straggler=self._on_straggler if recover_on_straggler else None,
+            telemetry=self.tm)
         self.ckpt_every = ckpt_every
         self.log_every = log_every
         self.eval_fn = eval_fn
@@ -50,10 +59,35 @@ class TrainLoop:
         last-good state and reset the offload channels (drop in-flight
         buffers, restore last-good banks, lift quarantine)."""
         self.recoveries += 1
+        if self.tm:
+            self.tm.record("train", 0, "recovery", step=step, dt=dt,
+                           median=med)
         self.ckpt.save_async(step, self._state())
         reset = getattr(self.session, "reset_channels", None)
         if reset is not None:
             reset()
+
+    # -- telemetry ----------------------------------------------------------
+    def _channel_briefs(self) -> dict:
+        """Per-user compact channel health (empty for channel-less modes)."""
+        chs = getattr(self.session, "channels", None)
+        if chs is None:
+            ch = getattr(self.session, "channel", None)
+            chs = [ch] if ch is not None else []
+        return {ch.user: ch.health_brief() for ch in chs}
+
+    def _emit_telemetry(self, step: int, loss: float) -> None:
+        """Absorb the train-side stat dicts into the registry (``train.*`` /
+        ``channel.*``) and append one snapshot to telemetry.jsonl."""
+        if self.tm is None:
+            return
+        reg = self.tm.registry
+        reg.absorb("train", {"step": step, "loss": float(loss),
+                             "recoveries": self.recoveries})
+        reg.absorb("train.watchdog", self.watchdog.stats)
+        for user, brief in self._channel_briefs().items():
+            reg.absorb(f"channel.u{user}", brief)
+        reg.emit(step=step)
 
     # -- state (de)hydration -------------------------------------------
     def _state(self) -> dict:
@@ -121,12 +155,15 @@ class TrainLoop:
                 dt = self.watchdog.end_step(step)
                 self.losses.append(loss)
                 if step % self.log_every == 0 or step == steps - 1:
-                    rec = {"step": step, "loss": loss, "dt": round(dt, 4)}
+                    rec = {"step": step, "loss": loss, "dt": round(dt, 4),
+                           "watchdog": self.watchdog.brief(),
+                           "channel_health": self._channel_briefs()}
                     if self.eval_every and self.eval_fn and \
                             step % self.eval_every == 0:
                         rec.update(self.eval_fn(step))
                     mf.write(json.dumps(rec) + "\n")
                     mf.flush()
+                    self._emit_telemetry(step, loss)
                 if (step + 1) % self.ckpt_every == 0 or self._preempted:
                     self.ckpt.save_async(step + 1, self._state())
                 if self._preempted:
@@ -142,6 +179,7 @@ class TrainLoop:
             "stragglers": len(self.watchdog.stragglers),
             "recoveries": self.recoveries,
             "heartbeat_failures": self.watchdog.stats["heartbeat_failures"],
+            "watchdog": self.watchdog.summary(),
         }
         health = getattr(self.session, "channel_health", None)
         if health is not None:

@@ -17,6 +17,8 @@ import os
 import time
 from typing import Callable
 
+from repro.telemetry.metrics import percentiles
+
 
 class WatchdogError(RuntimeError):
     """Watchdog API misuse (e.g. end_step without a matching start_step)."""
@@ -25,15 +27,19 @@ class WatchdogError(RuntimeError):
 class Watchdog:
     def __init__(self, window: int = 50, threshold: float = 3.0,
                  heartbeat_path: str | None = None,
-                 on_straggler: Callable[[int, float, float], None] | None = None):
+                 on_straggler: Callable[[int, float, float], None] | None = None,
+                 telemetry=None):
         self.window = window
         self.threshold = threshold
         self.heartbeat_path = heartbeat_path
         self.on_straggler = on_straggler
         self.durations: collections.deque[float] = collections.deque(maxlen=window)
         self.stragglers: list[tuple[int, float, float]] = []
-        self.stats = {"heartbeats": 0, "heartbeat_failures": 0}
+        self.stats = {"steps": 0, "heartbeats": 0, "heartbeat_failures": 0}
         self._t0: float | None = None
+        # observational: step-time histogram + a per-step breadcrumb ring so
+        # a straggler postmortem shows the steps leading up to the outlier
+        self.tm = telemetry if telemetry else None
 
     def start_step(self) -> None:
         self._t0 = time.perf_counter()
@@ -44,9 +50,19 @@ class Watchdog:
                 "end_step() called without a matching start_step()")
         dt = time.perf_counter() - self._t0
         self._t0 = None
+        self.stats["steps"] += 1
         med = self.median()
+        if self.tm is not None:
+            self.tm.registry.histogram("train.step_s").observe(dt)
+            self.tm.record("train", 0, "step", step=step, dt=dt)
         if med is not None and len(self.durations) >= 10 and dt > self.threshold * med:
             self.stragglers.append((step, dt, med))
+            if self.tm is not None:
+                self.tm.record("train", 0, "straggler", step=step, dt=dt,
+                               median=med)
+                self.tm.dump("train", 0,
+                             f"straggler step {step}: {dt:.4f}s > "
+                             f"{self.threshold:g}x median {med:.4f}s")
             if self.on_straggler:
                 self.on_straggler(step, dt, med)
         self.durations.append(dt)
@@ -68,3 +84,21 @@ class Watchdog:
             return None
         s = sorted(self.durations)
         return s[len(s) // 2]
+
+    def summary(self) -> dict:
+        """Step-time health over the sliding window: counters plus tail
+        percentiles (``step_s`` is None until a step completes)."""
+        out = dict(self.stats)
+        out["stragglers"] = len(self.stragglers)
+        out["median_s"] = self.median()
+        out["step_s"] = percentiles(self.durations)
+        return out
+
+    def brief(self) -> dict:
+        """Compact record for periodic logging (TrainLoop's metrics.jsonl)."""
+        p = percentiles(self.durations)
+        return {"steps": self.stats["steps"],
+                "stragglers": len(self.stragglers),
+                "heartbeat_failures": self.stats["heartbeat_failures"],
+                "median_s": self.median(),
+                "p95_s": p["p95"] if p else None}

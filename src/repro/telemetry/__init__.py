@@ -1,0 +1,118 @@
+"""Unified telemetry for the FTaaS stack: metric registry, span tracing and
+the flight recorder behind one facade.
+
+Three pillars (ISSUE 10):
+
+- **Metrics** (`metrics.MetricRegistry`): counters/gauges/fixed-bucket
+  histograms under namespaced names (``serve.*``, ``store.*``, ``channel.*``,
+  ``pager.*``, ``train.*``) with one ``snapshot()``, a JSONL streamer and a
+  Prometheus text exporter. The five legacy stat dicts keep working and are
+  absorbed into the registry.
+- **Tracing** (`tracing.Tracer`): Chrome-trace-event (Perfetto-loadable)
+  spans — per-tick serve spans and per-user offload-round spans carrying the
+  channel's seq ids in their args. Read back with
+  ``python -m repro.trace_summary``.
+- **Flight recorder** (`recorder.FlightRecorder`): bounded per-user/per-slot
+  rings of recent events, frozen into postmortem files on quarantine,
+  validation rollback, PagerError or a watchdog straggler.
+
+Usage: build one ``Telemetry`` and hand it to the components you want
+observed (``ServeEngine(telemetry=tm)``, ``ColaSession(telemetry=tm)``,
+``TrainLoop(telemetry=tm)``, ...). Components accept ``telemetry=None``
+(the default): the disabled path is one attribute check per site and MUST
+stay a no-op — generated tokens are bit-identical telemetry-on vs. off
+because telemetry only ever *reads* host-side values and never touches a
+jitted computation (guarded by tests/test_telemetry.py).
+"""
+from __future__ import annotations
+
+import contextlib
+
+from repro.telemetry.metrics import (DEFAULT_TIME_BUCKETS, MetricRegistry,
+                                     percentiles)
+from repro.telemetry.recorder import FlightRecorder
+from repro.telemetry.tracing import Tracer, validate_trace
+
+__all__ = ["Telemetry", "MetricRegistry", "Tracer", "FlightRecorder",
+           "validate_trace", "percentiles", "annotate", "NULL_CONTEXT",
+           "DEFAULT_TIME_BUCKETS"]
+
+# one shared reusable no-op context: the entire cost of a disabled span
+NULL_CONTEXT = contextlib.nullcontext()
+
+# module-global switch for jax-profiler annotations around jitted dispatches
+_ANNOTATE = False
+
+
+def enable_jax_annotations(on: bool) -> None:
+    global _ANNOTATE
+    _ANNOTATE = bool(on)
+
+
+def annotate(name: str):
+    """Optional ``jax.profiler.TraceAnnotation`` around a jitted hot-path
+    dispatch (decode tick, prefill chunk, offloaded fit). Off by default —
+    the disabled path returns the shared null context. Enable via
+    ``Telemetry(jax_annotations=True)`` when profiling with the jax/TensorBoard
+    profiler; the annotation names host dispatch slices in that timeline."""
+    if not _ANNOTATE:
+        return NULL_CONTEXT
+    from jax.profiler import TraceAnnotation
+    return TraceAnnotation(name)
+
+
+class Telemetry:
+    """Facade tying the registry, tracer and flight recorder together.
+
+    Parameters
+    ----------
+    enabled           : master switch. ``Telemetry(enabled=False)`` is
+                        indistinguishable from passing ``telemetry=None``.
+    trace             : collect Chrome-trace spans (off by default — spans
+                        accumulate in memory until ``export_trace``).
+    recorder_capacity : events retained per flight-recorder key.
+    out_dir           : where postmortem files land (None = in-memory only).
+    jax_annotations   : arm ``annotate()`` hooks around jitted dispatches.
+    """
+
+    def __init__(self, *, enabled: bool = True, trace: bool = False,
+                 recorder_capacity: int = 64, out_dir: str | None = None,
+                 jax_annotations: bool = False):
+        self.enabled = bool(enabled)
+        self.registry = MetricRegistry(enabled=self.enabled)
+        self.tracer = Tracer() if (self.enabled and trace) else None
+        self.recorder = (FlightRecorder(capacity=recorder_capacity,
+                                        out_dir=out_dir)
+                         if self.enabled else None)
+        if self.enabled and jax_annotations:
+            enable_jax_annotations(True)
+
+    def __bool__(self) -> bool:
+        return self.enabled
+
+    # -- tracing -----------------------------------------------------------
+    def span(self, name: str, cat: str = "serve", tid: int = 0, **args):
+        if self.tracer is None:
+            return NULL_CONTEXT
+        return self.tracer.span(name, cat=cat, tid=tid, **args)
+
+    def name_thread(self, tid: int, name: str) -> None:
+        if self.tracer is not None:
+            self.tracer.name_thread(tid, name)
+
+    def export_trace(self, path: str) -> str | None:
+        return self.tracer.export(path) if self.tracer is not None else None
+
+    # -- flight recorder ---------------------------------------------------
+    def record(self, scope: str, key, kind: str, **fields) -> None:
+        if self.recorder is not None:
+            self.recorder.record(scope, key, kind, **fields)
+
+    def dump(self, scope: str, key, reason: str) -> dict | None:
+        if self.recorder is not None:
+            return self.recorder.dump(scope, key, reason)
+        return None
+
+    # -- metrics -----------------------------------------------------------
+    def snapshot(self) -> dict:
+        return self.registry.snapshot()

@@ -59,13 +59,14 @@ def _mk():
 
 
 def _run_collab(injector=None, steps=STEPS, all_rows_user0=False,
-                quarantine_after=2):
+                quarantine_after=2, telemetry=None):
     cfg, params, key = _mk()
     cc = ColaConfig(mode="faithful_offload", family="lowrank", taps="qv",
                     rank=4, merged=True, users=2)
     collab = CollabSession(cfg, cc, params, key, optimizer=opt.sgd(0.1),
                            injector=injector, policy=POLICY,
-                           quarantine_after=quarantine_after)
+                           quarantine_after=quarantine_after,
+                           telemetry=telemetry)
     data = SyntheticLM(cfg, batch=4, seq=16, seed=2, users=2)
     losses = []
     for t in range(steps):
@@ -193,6 +194,55 @@ def test_poisoned_peer_quarantined_healthy_user_bit_exact(ref_user0_only):
             want = np.asarray(before[tap][name])
             sl = ((slice(None), 1) if got.ndim == 4 else (1,))
             np.testing.assert_array_equal(got[sl], want[sl])
+
+
+def test_quarantine_postmortem_names_failing_seq(tmp_path):
+    """ISSUE 10 acceptance: a chaos quarantine run must freeze a flight-
+    recorder postmortem for the poisoned user whose event ring names the
+    failing channel seq ids — injected fault, rejection, rollback and the
+    final quarantine, explainable without re-running the chaos."""
+    import json
+
+    from repro.telemetry import Telemetry
+
+    tm = Telemetry(out_dir=str(tmp_path))
+    injector = FaultInjector(
+        {1: FaultProfile(nan=1.0, targets=("adapters",))}, seed=SEED,
+        telemetry=tm)
+    collab, _ = _run_collab(injector=injector, all_rows_user0=True,
+                            telemetry=tm)
+    ch1 = collab.channels[1]
+    assert ch1.quarantined
+    # health names the terminal failure + the offending seq id
+    h = ch1.health()
+    assert h["last_error"] == "quarantined" or "adapter" in h["last_error"] \
+        or "finite" in h["last_error"]
+    assert isinstance(h["last_error_seq"], int)
+
+    pms = [p for p in tm.recorder.postmortems
+           if p["scope"] == "user" and p["key"] == 1]
+    assert pms, "quarantine run must dump user-1 postmortems"
+    q = [p for p in pms if p["reason"].startswith("quarantined after")]
+    assert len(q) == 1, "exactly one quarantine postmortem for the user"
+    pm = q[0]
+    kinds = [e["kind"] for e in pm["events"]]
+    # the injected cause sits in the same ring as the channel's reaction
+    assert "fault_injected" in kinds
+    assert "rollback" in kinds and "quarantine" in kinds
+    # rejection/rollback breadcrumbs carry the failing seq id
+    failing = [e["seq"] for e in pm["events"]
+               if e["kind"] in ("fit_rejected", "rollback") and "seq" in e]
+    assert failing and all(isinstance(s, int) for s in failing)
+    assert h["last_error_seq"] in failing
+    # the on-disk postmortem round-trips with the in-memory record
+    assert pm["path"] and os.path.exists(pm["path"])
+    with open(pm["path"]) as f:
+        on_disk = json.load(f)
+    assert on_disk["reason"] == pm["reason"]
+    assert [e["kind"] for e in on_disk["events"]] == kinds
+    # the healthy user never quarantines, so never dumps
+    assert not any(p["key"] == 0 for p in tm.recorder.postmortems
+                   if p["scope"] == "user")
 
 
 # ---------------------------------------------------------------------------

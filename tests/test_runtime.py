@@ -206,11 +206,13 @@ def test_watchdog_heartbeat_survives_disk_errors(tmp_path):
     good = Watchdog(heartbeat_path=str(tmp_path / "hb.json"))
     good.start_step()
     good.end_step(0)
-    assert good.stats == {"heartbeats": 1, "heartbeat_failures": 0}
+    assert good.stats == {"steps": 1, "heartbeats": 1,
+                          "heartbeat_failures": 0}
 
     bad = Watchdog(heartbeat_path=str(tmp_path / "no_such_dir" / "hb.json"))
     for step in range(3):
         bad.start_step()
         dt = bad.end_step(step)
         assert dt >= 0.0
-    assert bad.stats == {"heartbeats": 0, "heartbeat_failures": 3}
+    assert bad.stats == {"steps": 3, "heartbeats": 0,
+                         "heartbeat_failures": 3}
